@@ -1,0 +1,65 @@
+"""Kernel microbenches: Pallas (interpret on CPU) vs pure-jnp reference.
+
+On this container the interpret-mode wall time is NOT the figure of merit
+(the kernel body runs op-by-op in Python); the derived column therefore
+reports the *algorithmic* quantities that transfer to TPU: FLOPs, bytes
+touched, arithmetic intensity, and correctness vs the oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from .common import emit, time_call
+
+
+def main() -> list[str]:
+    out = []
+    rng = np.random.default_rng(0)
+    n = 256
+
+    a = jnp.asarray(np.where(rng.random((n, n)) < 0.2,
+                             rng.integers(1, 9, (n, n)), np.inf), jnp.float32)
+    t_ref = time_call(lambda: ref.minplus_ref(a, a))
+    ok = bool(jnp.array_equal(ops.minplus(a, a), ref.minplus_ref(a, a)))
+    flops = n * n * n * 2
+    out.append(emit("kern_minplus_ref256", t_ref,
+                    f"ok={ok};flops={flops:.2e};ai={flops/(3*n*n*4):.1f}"))
+
+    ab = jnp.asarray(rng.random((n, n)) < 0.05)
+    t_ref = time_call(lambda: ref.boolmm_ref(ab, ab))
+    ok = bool(jnp.array_equal(ops.boolmm(ab, ab), ref.boolmm_ref(ab, ab)))
+    out.append(emit("kern_boolmm_ref256", t_ref, f"ok={ok};mxu=yes"))
+
+    mask = jnp.asarray(rng.random(n) < 0.5)
+    dn, ch = ops.relax(a, a, mask)
+    dn2, ch2 = ref.relax_ref(a, a, mask)
+    ok = bool(jnp.array_equal(dn, dn2) and jnp.array_equal(ch, ch2))
+    t_ref = time_call(lambda: ref.relax_ref(a, a, mask))
+    out.append(emit("kern_relax_ref256", t_ref,
+                    f"ok={ok};fused=join+aggregate+delta"))
+
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 512, 64), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 512, 64), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 2, 512, 64), jnp.float32)
+    w = ref.flash_attention_ref(q, k, v, causal=True)
+    o = ops.flash(q, k, v, causal=True)
+    err = float(jnp.max(jnp.abs(o - w)))
+    t_ref = time_call(lambda: ref.flash_attention_ref(q, k, v, causal=True))
+    out.append(emit("kern_flash_ref_b1h8s512", t_ref, f"maxerr={err:.1e}"))
+
+    aa = jax.random.uniform(jax.random.PRNGKey(3), (2, 1024, 256), jnp.float32, 0.5, 0.99)
+    bb = jax.random.normal(jax.random.PRNGKey(4), (2, 1024, 256), jnp.float32)
+    hr = ref.rglru_scan_ref(aa, bb)
+    h = ops.rglru(aa, bb)
+    err = float(jnp.max(jnp.abs(h - hr)))
+    t_ref = time_call(lambda: ref.rglru_scan_ref(aa, bb))
+    out.append(emit("kern_rglru_ref_s1024", t_ref, f"maxerr={err:.1e}"))
+    return out
+
+
+if __name__ == "__main__":
+    main()

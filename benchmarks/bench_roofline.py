@@ -1,0 +1,52 @@
+"""Roofline table from the dry-run artifacts (§Roofline deliverable).
+
+Reads artifacts/dryrun/*.json (produced by ``repro.launch.dryrun``) and emits
+one row per (arch × shape) cell on the single-pod mesh: the three terms in
+seconds, the dominant bottleneck, per-device HBM peak, and the useful-flops
+ratio MODEL_FLOPS / (HLO_FLOPs × chips).
+"""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+from .common import emit
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def rows(mesh: str = "pod16x16") -> list[dict]:
+    out = []
+    for f in sorted(glob.glob(str(ART / f"*__{mesh}.json"))):
+        out.append(json.loads(Path(f).read_text()))
+    return out
+
+
+def main() -> list[str]:
+    out = []
+    recs = rows()
+    if not recs:
+        print("no dry-run artifacts; run: python -m repro.launch.dryrun --all")
+        return out
+    for r in recs:
+        name = f"roofline_{r['arch']}_{r['shape']}"
+        if r["status"] == "skip":
+            out.append(emit(name, 0.0, f"SKIP:{r['reason'][:60]}"))
+            continue
+        if r["status"] != "ok":
+            out.append(emit(name, 0.0, f"ERROR:{r.get('error','')[:60]}"))
+            continue
+        rf = r["roofline"]
+        dom_s = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        peak_gb = r["memory"]["peak_estimate_bytes"] / 1e9
+        out.append(emit(
+            name, dom_s,
+            f"dominant={rf['dominant']};compute_s={rf['compute_s']:.3f};"
+            f"memory_s={rf['memory_s']:.3f};collective_s={rf['collective_s']:.3f};"
+            f"useful={rf['useful_ratio']:.3f};hbm_peak_gb={peak_gb:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    main()

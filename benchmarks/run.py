@@ -1,0 +1,44 @@
+"""Benchmark aggregator — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Sections:
+  fig5_*    TC/SG engine comparison (paper Figure 5)
+  fig6_*    scale-out worker sweep (Figure 6)
+  table7_*  scale-up + generated-facts accounting (Figure 7 / Tables 7-8)
+  fig9_*    multicore query set TC/SG/ATTEND (Figure 9)
+  table4_*/ex9_*  rollup prefix table + longest pattern (§4, Tables 1-5)
+  kern_*    Pallas kernel correctness/intensity
+  roofline_* the 40-cell dry-run roofline table (§Roofline)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from . import (bench_kernels, bench_multicore, bench_roofline,
+                   bench_rollup, bench_scaleout, bench_scaleup, bench_tc_sg)
+    sections = [
+        ("fig5 tc/sg engines", bench_tc_sg),
+        ("fig6 scale-out", bench_scaleout),
+        ("table7 scale-up", bench_scaleup),
+        ("fig9 multicore queries", bench_multicore),
+        ("table4/ex9 analytics", bench_rollup),
+        ("kernels", bench_kernels),
+        ("roofline", bench_roofline),
+    ]
+    failures = 0
+    for name, mod in sections:
+        print(f"# --- {name} ---", flush=True)
+        try:
+            mod.main()
+        except Exception:  # noqa: BLE001 — report and continue
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""In-database graph analytics (§3 of the paper): k-cores, effective
+diameter, connected components — plus the dense-MXU engine and the Pallas
+relaxation kernel evaluating the same queries.
+
+Usage:  PYTHONPATH=src python examples/graph_analytics.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import Engine
+from repro.core.seminaive import (connected_components_dense,
+                                  shortest_paths_dense,
+                                  transitive_closure_dense)
+from repro.data.graphs import gnp_graph, graph_to_adj, grid_graph
+from repro.kernels import ops
+
+# ------------------------------------------------------- k-cores (Example 7)
+arc = np.array([[a, b] for a in range(5) for b in range(5) if a != b]
+               + [[0, 5], [5, 0], [5, 6], [6, 5]])
+eng = Engine("""
+degree(X, count<Y>) <- arc(X,Y).
+validArc(X,Y) <- arc(X,Y), degree(X,D1), D1 >= 4, degree(Y,D2), D2 >= 4.
+connComp(A,A) <- validArc(A,B).
+connComp(C,min<B>) <- connComp(A,B), validArc(A,C).
+kCores(A,B) <- connComp(A,B).
+""", db={"arc": arc}, default_cap=4096).run()
+print("4-core members:", sorted({int(r[0]) for r in eng.query("kCores")}))
+
+# --------------------------------------- effective diameter (Example 6)
+path_arcs = np.array([[i, i + 1] for i in range(9)] +
+                     [[i + 1, i] for i in range(9)])
+eng = Engine("""
+hops(X,Y,min<H>) <- arc(X,Y), H = 1.
+hops(X,Z,min<H>) <- hops(X,Y,H1), arc(Y,Z), H = H1 + 1.
+""", db={"arc": path_arcs}, default_cap=1 << 14).run()
+_, hop_vals = eng.query_agg("hops")
+import collections
+
+hist = collections.Counter(int(v) for v in hop_vals)
+total, cov = sum(hist.values()), 0
+for h in sorted(hist):
+    cov += hist[h]
+    if cov >= 0.9 * total:
+        print(f"effective diameter (90% coverage): {h} hops "
+              f"({cov}/{total} pairs)")
+        break
+
+# ------------------------------------- the same queries, dense MXU form
+edges = gnp_graph(300, 0.01, seed=1)
+adj = jnp.asarray(graph_to_adj(edges))
+tc = transitive_closure_dense(adj)
+print(f"dense TC on G300: {int(np.asarray(tc.table).sum())} pairs in "
+      f"{int(tc.iterations)} semiring-matmul iterations")
+
+cc = connected_components_dense(adj)
+labels = np.asarray(cc.table)
+print(f"dense CC: {len(set(labels[np.isfinite(labels)].tolist()))} components")
+
+# ---------------------------- fused Pallas relaxation driving SSSP
+n = 256
+g = grid_graph(15)
+w = np.full((n, n), np.inf, np.float32)
+g = g[(g < n).all(axis=1)]
+rng = np.random.default_rng(0)
+w[g[:, 0], g[:, 1]] = rng.integers(1, 5, len(g))
+d = jnp.asarray(w)
+mask = jnp.ones(n, bool)
+iters = 0
+while bool(mask.any()):
+    d, mask = ops.relax(d, jnp.asarray(w), mask, bm=64, bn=64, bk=32)
+    iters += 1
+ref = shortest_paths_dense(jnp.asarray(w))
+print(f"Pallas relax kernel fixpoint: {iters} iterations, "
+      f"matches dense engine: {bool(jnp.array_equal(d, ref.table))}")

@@ -1,0 +1,64 @@
+"""Batched greedy serving with KV caches (prefill + decode loop).
+
+Serves a smoke-scale model: prefills a batch of prompts, then decodes N
+tokens greedily, demonstrating the cache machinery (dense, ring-buffer SWA,
+and recurrent state all ride the same decode path).
+
+Usage:  PYTHONPATH=src python examples/serve_lm.py [--arch mixtral-8x7b]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.model import Model
+from repro.train import make_serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-14b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    assert cfg.supports_decode, f"{args.arch} is encoder-only"
+    model = Model(cfg, tp=1, use_chunked_attn=False, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    serve = jax.jit(make_serve_step(model))
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab,
+                                       (args.batch, args.prompt_len)), jnp.int32)
+    max_len = args.prompt_len + args.gen
+    cache = model.init_cache(args.batch, max_len)
+
+    # prefill by stepping the decoder (teacher-forcing the prompt)
+    t0 = time.perf_counter()
+    tok = prompts[:, 0]
+    for t in range(args.prompt_len):
+        nxt, _, cache = serve(params, cache, prompts[:, t], jnp.int32(t))
+    prefill_s = time.perf_counter() - t0
+
+    out = []
+    tok = nxt
+    t0 = time.perf_counter()
+    for t in range(args.prompt_len, max_len):
+        tok, logits, cache = serve(params, cache, tok, jnp.int32(t))
+        out.append(np.asarray(tok))
+    decode_s = time.perf_counter() - t0
+    gen = np.stack(out, axis=1)
+    print(f"arch={cfg.name} batch={args.batch}")
+    print(f"prefill {args.prompt_len} tokens: {prefill_s*1e3:.0f} ms; "
+          f"decode {args.gen} tokens: {decode_s*1e3:.0f} ms "
+          f"({args.gen*args.batch/decode_s:.1f} tok/s)")
+    print("generated token ids (first sequence):", gen[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

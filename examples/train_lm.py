@@ -1,0 +1,80 @@
+"""End-to-end training driver: a small LM on the synthetic corpus with the
+full production runtime (async checkpoints, failure injection + restart,
+straggler logging, deterministic data).
+
+Defaults train a ~100M-parameter model for 300 steps (hours on this CPU
+container; the same script is the real driver on a TPU host).  ``--preset
+demo`` runs a ~5M model for 120 steps in a few minutes and demonstrates the
+loss dropping + a mid-run injected failure with bit-exact resume.
+
+Usage:
+  PYTHONPATH=src python examples/train_lm.py --preset demo
+  PYTHONPATH=src python examples/train_lm.py --dim 768 --layers 12 --steps 300
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.data.tokens import TokenPipeline
+from repro.models.model import Model
+from repro.runtime import DriverConfig, TrainDriver, run_with_restarts
+from repro.train import AdamWConfig
+
+
+def make_config(dim: int, layers: int, vocab: int) -> ArchConfig:
+    return ArchConfig(
+        name=f"lm-{dim}x{layers}", family="dense",
+        n_layers=layers, d_model=dim, n_heads=max(dim // 64, 1),
+        n_kv_heads=max(dim // 128, 1), d_ff=dim * 4, vocab=vocab,
+        head_dim=64, pattern=("attn",), act="silu", tie_embeddings=True,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=["demo", "100m"], default=None)
+    ap.add_argument("--dim", type=int, default=768)
+    ap.add_argument("--layers", type=int, default=12)
+    ap.add_argument("--vocab", type=int, default=8192)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/train_lm_ckpt")
+    ap.add_argument("--inject-failure", action="store_true", default=True)
+    args = ap.parse_args()
+
+    if args.preset == "demo":
+        args.dim, args.layers, args.vocab = 256, 4, 2048
+        args.steps, args.batch, args.seq = 120, 8, 128
+    elif args.preset == "100m":
+        args.dim, args.layers, args.vocab = 768, 12, 32768
+
+    cfg = make_config(args.dim, args.layers, args.vocab)
+    model = Model(cfg, tp=1, use_chunked_attn=False, remat=False)
+    n_params = sum(x.size for x in jax.tree.leaves(
+        jax.eval_shape(model.init, jax.random.PRNGKey(0))))
+    print(f"model {cfg.name}: {n_params/1e6:.1f}M params")
+
+    pipe = TokenPipeline(vocab=cfg.vocab, seq_len=args.seq,
+                         global_batch=args.batch, seed=17)
+    opt = AdamWConfig(lr=args.lr, warmup_steps=20, total_steps=args.steps)
+    fail_at = (args.steps // 2,) if args.inject_failure else ()
+    dcfg = DriverConfig(ckpt_dir=args.ckpt_dir, ckpt_every=25,
+                        max_steps=args.steps, fail_at_steps=fail_at,
+                        log_every=10)
+
+    def mk():
+        return TrainDriver(model, opt, pipe, dcfg, seed=0)
+
+    driver = run_with_restarts(mk, args.steps)
+    first = driver.metrics_log[0]["loss"] if driver.metrics_log else float("nan")
+    last = driver.metrics_log[-1]["loss"]
+    print(f"done: step {driver.step}, loss {first:.3f} -> {last:.3f}, "
+          f"stragglers logged: {len(driver.straggler_events)}")
+
+
+if __name__ == "__main__":
+    main()

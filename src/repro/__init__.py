@@ -1,0 +1,16 @@
+"""repro — BigDatalog-X: recursive Datalog analytics + multi-pod LM framework in JAX.
+
+The paper's primary contribution (Datalog with aggregates-in-recursion under
+PreM, parallel semi-naive evaluation) lives in ``repro.core``.  The shared
+distribution substrate (mesh, sharding rules, launcher, roofline) also serves
+the ten assigned LM architectures in ``repro.models`` / ``repro.configs``.
+
+x64 is enabled package-wide: the relational engine packs tuples into int64
+keys (see ``repro.core.relation``).  All model code uses explicit dtypes, so
+the LM stack is unaffected by the wider defaults.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "1.0.0"

@@ -1,0 +1,6 @@
+"""Architecture config registry (one module per assigned architecture)."""
+from .base import (SHAPES, ArchConfig, ShapeSpec, all_arch_names, get_config,
+                   shape_skip_reason)
+
+__all__ = ["ArchConfig", "ShapeSpec", "SHAPES", "get_config",
+           "all_arch_names", "shape_skip_reason"]

@@ -1,0 +1,375 @@
+"""The Datalog runtime: stratum-ordered evaluation of planned programs.
+
+``Engine`` is the user-facing entry point (see ``examples/quickstart.py``):
+
+    eng = Engine(program_text, db={"arc": edges}, caps={"tc": 1 << 20})
+    eng.run()
+    tc = eng.query("tc")          # numpy rows
+    dist = eng.query_agg("spath") # (rows, values)
+
+Evaluation follows the iterated-fixpoint (perfect-model) schedule from §2:
+SCCs of the PCG evaluate leaves-first; recursive SCCs run the PSN fixpoint of
+Algorithm 1 under ``jax.lax.while_loop``; results materialize and become base
+relations for higher strata.  Aggregates-in-recursion run PreM-transferred
+(eager ⊕-merge per iteration) — the planner refuses programs where PreM fails
+structurally.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .ir import Arith, Comparison, Const, Program, Var
+from .parser import parse_program
+from .planner import (CompiledRule, EdbJoinStep, GroupPlan, IdbJoinStep, PlanError,
+                      ProgramPlan, SourceDelta, SourceEdb, plan_program)
+from .relation import EMPTY, AggTable, FactTable, Schema, expand_join, _MERGE_INIT
+from .seminaive import Bindings, EdbIndex, build_edb_index, join_edb, join_idb_prefix
+
+
+class CapacityError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class GroupStats:
+    iterations: int
+    generated: int  # facts produced before dedup (paper Tables 7/8)
+
+
+class Engine:
+    def __init__(
+        self,
+        program: Union[str, Program],
+        db: dict[str, np.ndarray],
+        bits: int = 18,
+        caps: dict[str, int] | None = None,
+        default_cap: int = 1 << 16,
+        join_cap: int | None = None,
+        max_iters: int = 1 << 16,
+        constants: dict[str, int] | None = None,
+    ):
+        if isinstance(program, str):
+            program = parse_program(program, constants=constants)
+        self.program = program
+        self.plan: ProgramPlan = plan_program(program)
+        self.bits = bits
+        self.caps = dict(caps or {})
+        self.default_cap = default_cap
+        self.join_cap = join_cap
+        self.max_iters = max_iters
+        self.db: dict[str, np.ndarray] = {
+            k: np.asarray(v, np.int64).reshape((len(v), -1)) for k, v in db.items()
+        }
+        limit = (1 << bits) - 1
+        for k, v in self.db.items():
+            if v.size and (v.min() < 0 or v.max() > limit):
+                raise ValueError(f"relation {k} exceeds {bits}-bit domain")
+        self.materialized: dict[str, tuple[np.ndarray, np.ndarray | None]] = {}
+        self.stats: dict[str, GroupStats] = {}
+        self._index_cache: dict[tuple[str, tuple[int, ...]], EdbIndex] = {}
+        self._pred_info = {p: info for gp in self.plan.groups
+                           for p, info in gp.preds.items()}
+
+    # -- public API ----------------------------------------------------------
+
+    def run(self) -> "Engine":
+        for gp in self.plan.groups:
+            self._eval_group(gp)
+        return self
+
+    def query(self, pred: str) -> np.ndarray:
+        rows, _ = self._result(pred)
+        return rows
+
+    def query_agg(self, pred: str) -> tuple[np.ndarray, np.ndarray]:
+        rows, vals = self._result(pred)
+        assert vals is not None, f"{pred} is not an aggregate predicate"
+        return rows, vals
+
+    def _result(self, pred: str):
+        if pred not in self.materialized:
+            raise KeyError(f"{pred} not evaluated; call run() (known: {list(self.materialized)})")
+        return self.materialized[pred]
+
+    # -- plumbing --------------------------------------------------------------
+
+    def _rows_of(self, rel: str) -> np.ndarray:
+        if rel in self.db:
+            return self.db[rel]
+        if rel in self.materialized:
+            rows, vals = self.materialized[rel]
+            if vals is not None:
+                # re-insert the aggregate value at its literal position
+                pos = self._pred_info[rel].agg_pos
+                return np.concatenate(
+                    [rows[:, :pos], vals[:, None].astype(np.int64), rows[:, pos:]],
+                    axis=1)
+            return rows
+        raise PlanError(f"unknown relation {rel!r} (neither EDB nor evaluated IDB)")
+
+    def _index(self, rel: str, cols: tuple[int, ...]) -> EdbIndex:
+        key = (rel, cols)
+        if key not in self._index_cache:
+            self._index_cache[key] = build_edb_index(self._rows_of(rel), cols, self.bits)
+        return self._index_cache[key]
+
+    def _schema(self, info) -> Schema:
+        return Schema(tuple([self.bits] * info.key_arity))
+
+    def _cap(self, pred: str) -> int:
+        return self.caps.get(pred, self.default_cap)
+
+    def _empty_table(self, info):
+        if info.is_agg:
+            kind = {"min": "min", "max": "max", "count": "count", "mcount": "count",
+                    "sum": "sum", "msum": "sum"}[info.agg]
+            return AggTable.empty(self._cap(info.name), kind)
+        return FactTable.empty(self._cap(info.name))
+
+    # -- group evaluation -----------------------------------------------------
+
+    def _eval_group(self, gp: GroupPlan):
+        state = {p: {"all": self._empty_table(info), "delta": None}
+                 for p, info in gp.preds.items()}
+
+        # facts (rules with empty bodies)
+        for pred, info in gp.preds.items():
+            facts = [r for r in self.program.rules_for(pred) if r.is_fact()]
+            if facts:
+                rows = np.array([[a.value for a in r.head.args] for r in facts], np.int64)
+                keys, vals = self._pack_rows(rows, info)
+                contrib = (keys, vals, jnp.zeros((), bool))
+                state[pred]["all"], _ = self._merge_contribs(state[pred]["all"], [contrib], info)
+
+        # exit rules
+        gen = jnp.int64(0)
+        contribs = {p: [] for p in gp.preds}
+        for cr in gp.exit_rules:
+            k, v, n, ovf = self._run_pipeline(cr, state, gp)
+            contribs[cr.head_pred].append((k, v, ovf))
+            gen = gen + n
+        for pred, info in gp.preds.items():
+            allt, _ = self._merge_contribs(state[pred]["all"], contribs[pred], info)
+            state[pred]["all"] = allt
+            state[pred]["delta"] = allt  # first delta = everything so far
+
+        iters = 0
+        if gp.recursive and gp.rec_rules:
+            state, iters, gen = self._psn_loop(gp, state, gen)
+
+        # materialize + overflow check, register for later strata
+        for pred, info in gp.preds.items():
+            t = state[pred]["all"]
+            if bool(t.overflow):
+                raise CapacityError(
+                    f"relation {pred!r} overflowed capacity {self._cap(pred)}; "
+                    f"pass caps={{'{pred}': <larger>}}"
+                )
+            schema = self._schema(info)
+            if info.is_agg:
+                rows, vals = t.to_numpy(schema)
+                self.materialized[pred] = (rows, vals)
+            else:
+                self.materialized[pred] = (t.to_numpy(schema), None)
+            self.stats[pred] = GroupStats(iterations=int(iters), generated=int(gen))
+
+    def _psn_loop(self, gp: GroupPlan, state, gen0):
+        """Algorithm 1, jitted: do { delta = T(delta) − all; all ∪= delta } while delta."""
+        preds = sorted(gp.preds)
+
+        def cond(carry):
+            st, it, gen = carry
+            alive = jnp.zeros((), bool)
+            for p in preds:
+                alive = alive | (st[p]["delta"].count > 0)
+            return alive & (it < self.max_iters)
+
+        def body(carry):
+            st, it, gen = carry
+            contribs = {p: [] for p in preds}
+            for cr in gp.rec_rules:
+                k, v, n, ovf = self._run_pipeline(cr, st, gp)
+                contribs[cr.head_pred].append((k, v, ovf))
+                gen = gen + n
+            new_st = {}
+            for p in preds:
+                info = gp.preds[p]
+                allt, delta = self._merge_contribs(st[p]["all"], contribs[p], info)
+                new_st[p] = {"all": allt, "delta": delta}
+            return new_st, it + 1, gen
+
+        carry = (state, jnp.int32(0), gen0)
+        run = jax.jit(lambda c: jax.lax.while_loop(cond, body, c))
+        st, it, gen = run(carry)
+        return st, it, gen
+
+    def _merge_contribs(self, allt, contribs, info):
+        """Concat *all* rule contributions for a predicate, merge once.
+
+        A single merge is required for additive aggregates (count/sum): the
+        delta must carry the final post-iteration value per key, not a stack
+        of intermediate snapshots.
+        """
+        if not contribs:
+            empty = self._empty_table(info)
+            return allt, empty
+        ovf = allt.overflow
+        for _, _, o in contribs:
+            ovf = ovf | o
+        keys = jnp.concatenate([k for k, _, _ in contribs])
+        if info.is_agg:
+            vals = jnp.concatenate([v for _, v, _ in contribs])
+            merged, delta = allt.merge(keys, vals)
+        else:
+            new = FactTable.from_keys(keys, allt.capacity)
+            delta = new.difference(allt)
+            merged = allt.union(delta)
+        merged = dataclasses.replace(merged, overflow=merged.overflow | ovf)
+        return merged, delta
+
+    def _pack_rows(self, rows: np.ndarray, info):
+        schema = self._schema(info)
+        if info.is_agg:
+            keys = schema.pack([jnp.asarray(rows[:, i]) for i in range(info.key_arity)])
+            vals = jnp.asarray(rows[:, info.key_arity], jnp.int32)
+            return keys, vals
+        keys = schema.pack([jnp.asarray(rows[:, i]) for i in range(rows.shape[1])])
+        return keys, None
+
+    def _join_idb(self, b: Bindings, step, state, gp: GroupPlan, jcap: int) -> Bindings:
+        """Join bindings against an IDB table (the recursive relation).
+
+        Prefix joins ride the table's own sort order (the decomposable read of
+        the paper's Fig. 4 plan).  Non-prefix joins re-pack the table with the
+        probe columns leading and re-sort — the in-engine equivalent of a
+        repartition/shuffle, and exactly what the RWA cost model charges for.
+        """
+        info = gp.preds[step.pred]
+        t = state[step.pred]["all"]
+        schema = self._schema(info)
+        values = getattr(t, "values", None)
+        n = len(step.probe_cols)
+        if step.is_prefix:
+            return join_idb_prefix(b, t.keys, t.count, step.probe_vars, schema,
+                                   n, values, dict(step.intro), jcap)
+        # --- shuffle path: permute columns so probe cols lead, re-sort
+        perm = list(step.probe_cols) + [c for c in range(info.key_arity)
+                                        if c not in step.probe_cols]
+        unpacked = schema.unpack(t.keys)
+        perm_schema = Schema(tuple(schema.bits[c] for c in perm))
+        valid_rows = jnp.arange(t.capacity) < t.count
+        repacked = perm_schema.pack([unpacked[c] for c in perm])
+        repacked = jnp.where(valid_rows, repacked, EMPTY)
+        order = jnp.argsort(repacked)
+        sorted_keys = repacked[order]
+        sorted_values = values[order] if values is not None else None
+        remapped_intro = {
+            v: ("value" if c == "value" else perm.index(c))
+            for v, c in dict(step.intro).items()
+        }
+        return join_idb_prefix(b, sorted_keys, t.count, step.probe_vars, perm_schema,
+                               n, sorted_values, remapped_intro, jcap)
+
+    # -- pipeline execution ----------------------------------------------------
+
+    def _run_pipeline(self, cr: CompiledRule, state, gp: GroupPlan):
+        """Execute one compiled rule; return (head_keys, head_values, produced)."""
+        jcap = self.join_cap or self.default_cap
+
+        # --- source bindings
+        if isinstance(cr.source, SourceDelta):
+            info = gp.preds[cr.source.pred]
+            t = state[cr.source.pred]["delta"]
+            schema = self._schema(info)
+            unpacked = schema.unpack(t.keys)
+            cols = {}
+            for v, c in zip(cr.source.key_vars, unpacked):
+                if v:
+                    cols[v] = c
+            if cr.source.value_var:
+                cols[cr.source.value_var] = t.incs if cr.use_increment else t.values
+            valid = jnp.arange(t.capacity) < t.count
+            b = Bindings(cols, valid, t.overflow & False)
+        else:
+            rows = jnp.asarray(self._rows_of(cr.source.rel))
+            cols = {v: rows[:, i].astype(jnp.int32) for v, i in cr.source.intro}
+            valid = jnp.ones((rows.shape[0],), bool)
+            b = Bindings(cols, valid, jnp.zeros((), bool))
+
+        # --- joins
+        for step in cr.joins:
+            if isinstance(step, EdbJoinStep):
+                idx = self._index(step.rel, step.build_cols)
+                if step.negated:
+                    key_schema = Schema(tuple([self.bits] * len(step.probe_vars)))
+                    shape = b.valid.shape
+                    pcols = [b.cols[v] if isinstance(v, str)
+                             else jnp.full(shape, v, jnp.int32)
+                             for v in step.probe_vars]
+                    probe = key_schema.pack(pcols)
+                    probe = jnp.where(b.valid, probe, EMPTY)
+                    pos = jnp.clip(jnp.searchsorted(idx.keys, probe), 0, idx.keys.shape[0] - 1)
+                    hit = (idx.keys[pos] == probe) & (pos < idx.count)
+                    b = Bindings(b.cols, b.valid & ~hit, b.overflow)
+                else:
+                    b = join_edb(b, idx, step.probe_vars, step.build_cols,
+                                 dict(step.intro), self.bits, jcap)
+            else:
+                b = self._join_idb(b, step, state, gp, jcap)
+
+        # --- interpreted goals
+        def term_col(t, ref_shape):
+            if isinstance(t, Var):
+                return b.cols[t.name]
+            return jnp.full(ref_shape, t.value, jnp.int32)
+
+        shape = b.valid.shape
+        valid = b.valid
+        for a in cr.ariths:
+            l, r = term_col(a.lhs, shape), term_col(a.rhs, shape)
+            res = l + r if a.op == "+" else l - r
+            if a.target.name in b.cols:  # already bound => equality constraint
+                valid = valid & (b.cols[a.target.name] == res)
+            else:
+                b.cols[a.target.name] = res
+        for c in cr.comps:
+            # '=' with one side unbound acts as a binding (L = L1 aliases)
+            if c.op == "=":
+                if isinstance(c.lhs, Var) and c.lhs.name not in b.cols:
+                    b.cols[c.lhs.name] = term_col(c.rhs, shape)
+                    continue
+                if isinstance(c.rhs, Var) and c.rhs.name not in b.cols:
+                    b.cols[c.rhs.name] = term_col(c.lhs, shape)
+                    continue
+            l, r = term_col(c.lhs, shape), term_col(c.rhs, shape)
+            op = {"<": l < r, "<=": l <= r, ">": l > r, ">=": l >= r,
+                  "=": l == r, "!=": l != r}[c.op]
+            valid = valid & op
+
+        # --- head projection
+        info = gp.preds[cr.head_pred]
+        schema = self._schema(info)
+        key_cols = []
+        for hk in cr.head_keys:
+            key_cols.append(b.cols[hk] if isinstance(hk, str) else jnp.full(shape, hk, jnp.int32))
+        keys = schema.pack(key_cols) if key_cols else jnp.zeros(shape, jnp.int64)
+        keys = jnp.where(valid, keys, EMPTY)
+        if info.is_agg:
+            if isinstance(cr.head_value, str):
+                vals = b.cols[cr.head_value].astype(jnp.int32)
+            else:
+                vals = jnp.full(shape, cr.head_value, jnp.int32)
+            kind = {"min": "min", "max": "max"}.get(info.agg, info.agg)
+            init = _MERGE_INIT["min" if info.agg == "min" else
+                               "max" if info.agg == "max" else "sum"]
+            vals = jnp.where(valid, vals, init)
+        else:
+            vals = None
+        produced = jnp.sum(valid).astype(jnp.int64)
+        return keys, vals, produced, b.overflow

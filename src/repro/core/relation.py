@@ -1,0 +1,386 @@
+"""Static-shape relational substrate for the JAX Datalog engines.
+
+XLA wants static shapes; Datalog produces dynamic cardinalities.  The bridge
+used throughout the engine is a *packed tuple table*: an int64 array of fixed
+capacity holding bit-packed tuples, kept sorted ascending, with empty slots
+filled by the sentinel ``EMPTY`` (int64 max) so that sort order doubles as a
+validity partition.  Set algebra (union / difference / dedup / membership)
+becomes sort + searchsorted, which XLA compiles well on both CPU and TPU.
+
+Two table kinds:
+
+``FactTable``  -- a *set* of tuples (classic Datalog relation).
+``AggTable``   -- a *map* group-key -> aggregate value with a lattice merge
+                  (min / max / sum / count).  This is what "aggregates in
+                  recursion" evaluate into: the PreM-transferred program keeps
+                  only the aggregate per group, exactly like the paper's
+                  optimized Example 2.
+
+Both are pytrees and safe to carry through ``jax.lax.while_loop``.  All ops
+are *monotone* in the sense of the paper's SetRDD argument (union only adds,
+min/max/sum merges only move down/up the lattice), so re-execution after a
+restart is idempotent.
+
+Capacity overflow is never silent: every producing op returns / accumulates an
+``overflow`` flag that the engine surfaces after the fixpoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+EMPTY = jnp.iinfo(jnp.int64).max  # sentinel for unused slots (sorts last)
+
+# ---------------------------------------------------------------------------
+# Bit packing
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Schema:
+    """Bit layout of a packed tuple: ``bits[i]`` bits for column i.
+
+    Columns are packed little-endian-by-column-0-in-the-high-bits so that the
+    packed int64 sort order equals lexicographic tuple order -- the property
+    every set op below relies on.
+    """
+
+    bits: tuple[int, ...]
+
+    def __post_init__(self):
+        if sum(self.bits) > 62:  # keep sign bit + sentinel headroom
+            raise ValueError(f"schema too wide: {self.bits} (> 62 bits)")
+
+    @property
+    def arity(self) -> int:
+        return len(self.bits)
+
+    @property
+    def shifts(self) -> tuple[int, ...]:
+        out, acc = [], 0
+        for b in reversed(self.bits):
+            out.append(acc)
+            acc += b
+        return tuple(reversed(out))
+
+    def pack(self, cols: Sequence[jax.Array]) -> jax.Array:
+        """Pack per-column int arrays into a single int64 key array."""
+        assert len(cols) == self.arity
+        key = jnp.zeros_like(jnp.asarray(cols[0], jnp.int64))
+        for c, shift in zip(cols, self.shifts):
+            key = key | (jnp.asarray(c, jnp.int64) << shift)
+        return key
+
+    def unpack(self, keys: jax.Array) -> list[jax.Array]:
+        """Inverse of :meth:`pack` (returns int32 columns)."""
+        out = []
+        for b, shift in zip(self.bits, self.shifts):
+            mask = (jnp.int64(1) << b) - 1
+            out.append(((keys >> shift) & mask).astype(jnp.int32))
+        return out
+
+    def max_values(self) -> tuple[int, ...]:
+        return tuple((1 << b) - 1 for b in self.bits)
+
+
+def default_schema(arity: int, bits: int = 20) -> Schema:
+    return Schema(tuple([bits] * arity))
+
+
+# ---------------------------------------------------------------------------
+# FactTable -- a set of packed tuples
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class FactTable:
+    """Sorted packed tuple set with static capacity."""
+
+    keys: jax.Array  # (cap,) int64, sorted asc, EMPTY-padded
+    count: jax.Array  # () int32, number of valid tuples
+    overflow: jax.Array  # () bool, True if any producing op dropped tuples
+
+    @property
+    def capacity(self) -> int:
+        return self.keys.shape[0]
+
+    @staticmethod
+    def empty(capacity: int) -> "FactTable":
+        return FactTable(
+            keys=jnp.full((capacity,), EMPTY, jnp.int64),
+            count=jnp.zeros((), jnp.int32),
+            overflow=jnp.zeros((), bool),
+        )
+
+    @staticmethod
+    def from_keys(raw: jax.Array, capacity: int) -> "FactTable":
+        """Build from an unsorted, possibly-duplicated key array (EMPTY = invalid)."""
+        return _compact(raw, capacity)
+
+    @staticmethod
+    def from_numpy(rows: np.ndarray, schema: Schema, capacity: int) -> "FactTable":
+        rows = np.asarray(rows, np.int64).reshape((-1, schema.arity))
+        keys = schema.pack([rows[:, i] for i in range(schema.arity)])
+        return _compact(jnp.asarray(keys), capacity)
+
+    def to_numpy(self, schema: Schema) -> np.ndarray:
+        keys = np.asarray(self.keys)
+        keys = keys[keys != np.iinfo(np.int64).max][: int(self.count)]
+        cols = [np.asarray(c) for c in schema.unpack(jnp.asarray(keys))]
+        return np.stack(cols, axis=-1) if keys.size else np.zeros((0, schema.arity), np.int32)
+
+    # -- set algebra ---------------------------------------------------------
+
+    def union(self, other: "FactTable", capacity: int | None = None) -> "FactTable":
+        cap = capacity or max(self.capacity, other.capacity)
+        merged = jnp.concatenate([self.keys, other.keys])
+        out = _compact(merged, cap)
+        return dataclasses.replace(out, overflow=out.overflow | self.overflow | other.overflow)
+
+    def difference(self, other: "FactTable") -> "FactTable":
+        """self - other. ``other`` must be sorted (it always is)."""
+        member = _is_member(self.keys, other.keys, other.count)
+        keys = jnp.where(member | (self.keys == EMPTY), EMPTY, self.keys)
+        out = _compact(keys, self.capacity)
+        return dataclasses.replace(out, overflow=out.overflow | self.overflow)
+
+    def member(self, keys: jax.Array) -> jax.Array:
+        return _is_member(keys, self.keys, self.count)
+
+
+def _compact(raw: jax.Array, capacity: int) -> FactTable:
+    """Sort, dedup, truncate/pad to ``capacity``. EMPTY entries are dropped."""
+    s = jnp.sort(raw)
+    is_dup = jnp.concatenate([jnp.zeros((1,), bool), s[1:] == s[:-1]])
+    s = jnp.where(is_dup | (s == EMPTY), EMPTY, s)
+    s = jnp.sort(s)
+    n_valid = jnp.sum(s != EMPTY).astype(jnp.int32)
+    if s.shape[0] >= capacity:
+        keys = s[:capacity]
+        overflow = n_valid > capacity
+    else:
+        keys = jnp.concatenate([s, jnp.full((capacity - s.shape[0],), EMPTY, jnp.int64)])
+        overflow = jnp.zeros((), bool)
+    return FactTable(keys=keys, count=jnp.minimum(n_valid, capacity), overflow=overflow)
+
+
+def _is_member(queries: jax.Array, table: jax.Array, count: jax.Array) -> jax.Array:
+    """Membership of each query in a sorted EMPTY-padded table."""
+    idx = jnp.searchsorted(table, queries)
+    idx = jnp.clip(idx, 0, table.shape[0] - 1)
+    hit = (table[idx] == queries) & (idx < count) & (queries != EMPTY)
+    return hit
+
+
+# ---------------------------------------------------------------------------
+# AggTable -- group-key -> value map with a lattice merge
+# ---------------------------------------------------------------------------
+
+_MERGE_INIT = {
+    "min": jnp.iinfo(jnp.int32).max,
+    "max": jnp.iinfo(jnp.int32).min,
+    "sum": 0,
+    "count": 0,
+}
+
+
+def _merge_op(kind: str):
+    if kind == "min":
+        return jnp.minimum
+    if kind == "max":
+        return jnp.maximum
+    if kind in ("sum", "count"):
+        return jnp.add
+    raise ValueError(kind)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AggTable:
+    """Sorted packed group keys + aggregate values.
+
+    ``kind`` is static ('min' | 'max' | 'sum' | 'count').  For 'min'/'max' the
+    merge is idempotent (a lattice meet/join); for 'sum'/'count' the merge is
+    additive, matching the mcount/msum monotonic semantics of the paper: the
+    value per key only ever moves one way, so fixpoints are well-defined when
+    the program is PreM / monotone.
+    """
+
+    keys: jax.Array  # (cap,) int64 sorted, EMPTY-padded
+    values: jax.Array  # (cap,) int32 (or float32) — aggregate totals
+    incs: jax.Array  # (cap,) — for *delta* tables of additive kinds, the
+    # increment this wave contributed; equals `values` otherwise
+    count: jax.Array  # () int32
+    overflow: jax.Array  # () bool
+    kind: str = dataclasses.field(metadata=dict(static=True), default="min")
+
+    @property
+    def capacity(self) -> int:
+        return self.keys.shape[0]
+
+    @staticmethod
+    def empty(capacity: int, kind: str, dtype=jnp.int32) -> "AggTable":
+        vals = jnp.full((capacity,), _MERGE_INIT[kind], dtype)
+        return AggTable(
+            keys=jnp.full((capacity,), EMPTY, jnp.int64),
+            values=vals,
+            incs=vals,
+            count=jnp.zeros((), jnp.int32),
+            overflow=jnp.zeros((), bool),
+            kind=kind,
+        )
+
+    @staticmethod
+    def from_pairs(keys: jax.Array, values: jax.Array, capacity: int, kind: str) -> "AggTable":
+        """Aggregate raw (key, value) pairs (EMPTY key = invalid) into a table."""
+        return _agg_compact(keys, values, capacity, kind)
+
+    @staticmethod
+    def from_numpy(rows: np.ndarray, values: np.ndarray, schema: Schema, capacity: int, kind: str) -> "AggTable":
+        rows = np.asarray(rows, np.int64).reshape((-1, schema.arity))
+        keys = schema.pack([rows[:, i] for i in range(schema.arity)])
+        return _agg_compact(jnp.asarray(keys), jnp.asarray(values), capacity, kind)
+
+    def to_numpy(self, schema: Schema) -> tuple[np.ndarray, np.ndarray]:
+        n = int(self.count)
+        keys = np.asarray(self.keys)[:n]
+        vals = np.asarray(self.values)[:n]
+        cols = [np.asarray(c) for c in schema.unpack(jnp.asarray(keys))]
+        tup = np.stack(cols, axis=-1) if n else np.zeros((0, schema.arity), np.int32)
+        return tup, vals
+
+    def merge(self, keys: jax.Array, values: jax.Array) -> tuple["AggTable", "AggTable"]:
+        """Merge raw pairs in; return (new_table, delta_table).
+
+        delta = keys whose aggregate value *changed*.  Semi-naive semantics
+        require the delta VALUE to be:
+          * min/max: the new (improved) value — re-deriving downstream facts
+            from it is idempotent in the lattice;
+          * sum/count: the INCREMENT (new - old) — downstream contributions
+            from earlier waves were already propagated, so only the increment
+            may flow (otherwise mixed-length path counts double-bill).
+        """
+        allk = jnp.concatenate([self.keys, keys])
+        allv = jnp.concatenate([self.values, jnp.asarray(values, self.values.dtype)])
+        new = _agg_compact(allk, allv, self.capacity, self.kind)
+        new = dataclasses.replace(new, overflow=new.overflow | self.overflow)
+        # old value per new key (init if the key was absent before)
+        idx = jnp.clip(jnp.searchsorted(self.keys, new.keys), 0, self.capacity - 1)
+        had = (self.keys[idx] == new.keys) & (new.keys != EMPTY)
+        oldv = jnp.where(had, self.values[idx], _MERGE_INIT[self.kind])
+        changed = (new.values != oldv) & (new.keys != EMPTY)
+        dkeys = jnp.where(changed, new.keys, EMPTY)
+        init = _MERGE_INIT[self.kind]
+        dtot = jnp.where(changed, new.values, init)
+        dinc = jnp.where(changed, new.values - oldv, init) \
+            if self.kind in ("sum", "count") else dtot
+        # delta keys come from `new` (already unique): sort EMPTY holes out
+        order = jnp.argsort(dkeys)
+        delta = AggTable(
+            keys=dkeys[order],
+            values=jnp.asarray(dtot[order], self.values.dtype),
+            incs=jnp.asarray(dinc[order], self.values.dtype),
+            count=jnp.sum(changed).astype(jnp.int32),
+            overflow=jnp.zeros((), bool),
+            kind=self.kind,
+        )
+        return new, delta
+
+    def lookup(self, keys: jax.Array) -> tuple[jax.Array, jax.Array]:
+        """Return (found, value) for each query key."""
+        idx = jnp.clip(jnp.searchsorted(self.keys, keys), 0, self.capacity - 1)
+        hit = (self.keys[idx] == keys) & (keys != EMPTY)
+        return hit, jnp.where(hit, self.values[idx], _MERGE_INIT[self.kind])
+
+
+def _agg_compact(keys: jax.Array, values: jax.Array, capacity: int, kind: str) -> AggTable:
+    """Sort by key, ⊕-reduce equal keys, compact to capacity."""
+    order = jnp.argsort(keys)
+    k, v = keys[order], values[order]
+    # segment-reduce runs of equal keys via an O(log n) doubling pass: after
+    # each step, position i holds the ⊕ of up to 2^s entries of its run ending
+    # at i... simpler & robust: use jax.ops.segment_* on run ids.
+    run_start = jnp.concatenate([jnp.ones((1,), bool), k[1:] != k[:-1]])
+    seg = jnp.cumsum(run_start) - 1  # run id per slot
+    nseg = k.shape[0]
+    if kind in ("sum", "count"):
+        red = jax.ops.segment_sum(v, seg, num_segments=nseg)
+    elif kind == "min":
+        red = jax.ops.segment_min(v, seg, num_segments=nseg)
+    else:
+        red = jax.ops.segment_max(v, seg, num_segments=nseg)
+    # representative slot per run = first slot of the run
+    first_idx = jnp.where(run_start, jnp.arange(k.shape[0]), k.shape[0] - 1)
+    rep_keys = jnp.where(run_start, k, EMPTY)
+    rep_vals = jnp.where(run_start, red[seg], _MERGE_INIT[kind])
+    # compact: sort reps (EMPTY last), truncate/pad
+    order2 = jnp.argsort(rep_keys)
+    rk, rv = rep_keys[order2], rep_vals[order2]
+    n_valid = jnp.sum(rk != EMPTY).astype(jnp.int32)
+    if rk.shape[0] >= capacity:
+        out_k, out_v = rk[:capacity], rv[:capacity]
+        overflow = n_valid > capacity
+    else:
+        pad = capacity - rk.shape[0]
+        out_k = jnp.concatenate([rk, jnp.full((pad,), EMPTY, jnp.int64)])
+        out_v = jnp.concatenate([rv, jnp.full((pad,), _MERGE_INIT[kind], rv.dtype)])
+        overflow = jnp.zeros((), bool)
+    out_v = jnp.asarray(out_v, values.dtype)
+    return AggTable(
+        keys=out_k,
+        values=out_v,
+        incs=out_v,
+        count=jnp.minimum(n_valid, capacity),
+        overflow=overflow,
+        kind=kind,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Joins
+# ---------------------------------------------------------------------------
+
+
+def expand_join(
+    probe_keys: jax.Array,
+    probe_valid: jax.Array,
+    build_sorted: jax.Array,
+    build_count: jax.Array,
+    out_capacity: int,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Equi-join a probe key array against a sorted build key array.
+
+    Returns ``(probe_idx, build_idx, valid, overflow)`` arrays of length
+    ``out_capacity`` enumerating all matching pairs (the classic
+    searchsorted-range + cumsum-offset expansion).  This is the engine's
+    hash-join equivalent: on TPU a sorted-array binary search beats a hash
+    table, and it is fully static-shape.
+    """
+    lo = jnp.searchsorted(build_sorted, probe_keys, side="left")
+    hi = jnp.searchsorted(build_sorted, probe_keys, side="right")
+    hi = jnp.minimum(hi, build_count)
+    matches = jnp.where(probe_valid, jnp.maximum(hi - lo, 0), 0)
+    offsets = jnp.cumsum(matches)
+    total = offsets[-1]
+    starts = offsets - matches  # first output slot per probe row
+    slot = jnp.arange(out_capacity)
+    # probe row owning output slot j: first row whose cumulative end > j
+    probe_idx = jnp.searchsorted(offsets, slot, side="right")
+    probe_idx = jnp.clip(probe_idx, 0, probe_keys.shape[0] - 1)
+    rank = slot - starts[probe_idx]
+    build_idx = jnp.clip(lo[probe_idx] + rank, 0, build_sorted.shape[0] - 1)
+    valid = slot < jnp.minimum(total, out_capacity)
+    overflow = total > out_capacity
+    return probe_idx, build_idx, valid, overflow
+
+
+def hash32(x: jax.Array, n: int) -> jax.Array:
+    """Deterministic partition hash (Fibonacci hashing) -> [0, n)."""
+    h = (jnp.asarray(x, jnp.uint64) * jnp.uint64(11400714819323198485)) >> jnp.uint64(40)
+    return (h % jnp.uint64(n)).astype(jnp.int32)

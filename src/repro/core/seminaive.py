@@ -1,0 +1,252 @@
+"""Semi-naive fixpoint evaluators.
+
+Two engines, one semantics (tested for equivalence):
+
+1. **Dense semiring engine** (``fixpoint_dense``) — the TPU-native adaptation
+   (DESIGN.md §3): each iteration is one ⊕.⊗ matrix product on the MXU, with
+   semi-naive evaluation realized as delta-row masking (idempotent ⊕) or
+   delta accumulation (additive ⊕).  The hot contraction can be swapped for a
+   Pallas kernel (``repro.kernels``).
+
+2. **Tuple PSN engine** (``psn_fixpoint``) — the faithful port of the paper's
+   Algorithm 1 (delta/all, subtract, distinct) over the static-shape tables
+   of ``relation.py``, driving compiled ``RulePipeline``s from the planner.
+   Handles multiple mutually-recursive predicates (the "driver" pattern of
+   §6.2) and aggregate tables (PreM-transferred programs).
+
+Both run under ``jax.lax.while_loop`` and are restart-idempotent (monotone
+state), matching the SetRDD fault-tolerance argument.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .relation import EMPTY, AggTable, FactTable, Schema, expand_join
+from .semiring import BOOL, MIN_PLUS, Semiring
+
+# ---------------------------------------------------------------------------
+# Dense semiring fixpoints
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DenseResult:
+    table: jax.Array  # fixpoint matrix / vector
+    iterations: jax.Array  # () int32
+    generated: jax.Array  # () int64 — facts produced before dedup (Tables 7/8)
+
+
+def _ne(sr: Semiring, a, b):
+    if sr.dtype == jnp.bool_:
+        return a != b
+    # inf-aware compare for tropical semirings
+    return ~((a == b) | (jnp.isinf(a) & jnp.isinf(b) & (jnp.sign(a) == jnp.sign(b))))
+
+
+def fixpoint_dense(
+    sr: Semiring,
+    arc: jax.Array,
+    init: jax.Array,
+    form: str = "linear",
+    matmul: Callable | None = None,
+    max_iters: int | None = None,
+) -> DenseResult:
+    """Dense fixpoint over a semiring.
+
+    form:
+      'linear'     D <- D ⊕ (Δmask·D) ⊗ arc          (tc r2 / dpath r2')
+      'nonlinear'  D <- D ⊕ D ⊗ D                    (dpath r5; log-depth)
+      'vector'     d <- d ⊕ arcᵀ-propagate(d)        (CC label propagation;
+                                                      d is (n,) and arc (n,n))
+      'sandwich'   S <- S ⊕ arcᵀ ⊗ (S ⊗ arc)         (same-generation)
+      'accumulate' C = Σ Δ;  Δ <- Δ ⊗ arc            (path counting, +,×)
+    """
+    mm = matmul or sr.matmul
+    n = init.shape[0]
+    if max_iters is None:
+        max_iters = 4 * n + 8
+
+    if form == "accumulate":
+        if sr.idempotent:
+            raise ValueError("accumulate form is for additive semirings")
+
+        def cond(s):
+            total, delta, it, gen = s
+            return jnp.any(delta != sr.zero) & (it < max_iters)
+
+        def body(s):
+            total, delta, it, gen = s
+            new = mm(delta, arc)
+            gen = gen + jnp.sum(new != sr.zero).astype(jnp.int64)
+            return total + new, new, it + 1, gen
+
+        total, _, it, gen = jax.lax.while_loop(
+            cond, body, (init, init, jnp.int32(0), jnp.int64(0))
+        )
+        return DenseResult(total, it, gen)
+
+    def step(D, mask):
+        if form == "linear":
+            Dm = jnp.where(mask[:, None], D, jnp.asarray(sr.zero, D.dtype))
+            upd = mm(Dm, arc)
+        elif form == "nonlinear":
+            # semi-naive for nonlinear: Δ⊗D ⊕ D⊗Δ (symbolically rewritten r5)
+            Dm = jnp.where(mask[:, None], D, jnp.asarray(sr.zero, D.dtype))
+            upd = sr.add(mm(Dm, D), mm(D, Dm))
+        elif form == "vector":
+            dm = jnp.where(mask, D, jnp.asarray(sr.zero, D.dtype))
+            upd = mm(dm[None, :], arc)[0] if D.ndim == 1 else mm(dm, arc)
+        elif form == "sandwich":
+            Dm = jnp.where(mask[:, None], D, jnp.asarray(sr.zero, D.dtype))
+            upd = mm(_transpose_arc(sr, arc), mm(Dm, arc))
+        else:
+            raise ValueError(form)
+        return sr.add(D, upd), upd
+
+    def cond(s):
+        D, mask, it, gen = s
+        return jnp.any(mask) & (it < max_iters)
+
+    def body(s):
+        D, mask, it, gen = s
+        Dn, upd = step(D, mask)
+        changed = _ne(sr, Dn, D)
+        gen = gen + jnp.sum(upd != jnp.asarray(sr.zero, D.dtype)).astype(jnp.int64)
+        new_mask = jnp.any(changed, axis=-1) if D.ndim > 1 else changed
+        return Dn, new_mask, it + 1, gen
+
+    mask0 = jnp.ones(init.shape[:-1] if init.ndim > 1 else init.shape, bool)
+    D, mask, it, gen = jax.lax.while_loop(cond, body, (init, mask0, jnp.int32(0), jnp.int64(0)))
+    return DenseResult(D, it, gen)
+
+
+def _transpose_arc(sr: Semiring, arc: jax.Array) -> jax.Array:
+    return arc.T
+
+
+# convenience graph front-ends ------------------------------------------------
+
+
+def transitive_closure_dense(adj: jax.Array, matmul=None) -> DenseResult:
+    """tc(X,Y) over the boolean semiring; adj is (n,n) bool."""
+    return fixpoint_dense(BOOL, adj, adj, form="linear", matmul=matmul)
+
+
+def shortest_paths_dense(w: jax.Array, matmul=None) -> DenseResult:
+    """All-pairs spath (Examples 2/3). w: (n,n) float32 with +inf for no arc."""
+    return fixpoint_dense(MIN_PLUS, w, w, form="linear", matmul=matmul)
+
+
+def same_generation_dense(adj: jax.Array, matmul=None) -> DenseResult:
+    """sg(X,Y) (Example 11): exit = AᵀA \\ id, recurse S <- Aᵀ S A.
+
+    Only the exit rule carries X != Y (the paper's r1); the recursive rule may
+    re-derive diagonal entries (possible when the graph has self-loops)."""
+    a = adj.astype(jnp.float32)
+    exit_ = (a.T @ a) > 0
+    exit_ = exit_ & ~jnp.eye(adj.shape[0], dtype=bool)
+    return fixpoint_dense(BOOL, adj, exit_, form="sandwich", matmul=matmul)
+
+
+def connected_components_dense(adj: jax.Array) -> DenseResult:
+    """connComp (Example 7 r7.3/r7.4): min-label propagation, undirected view."""
+    n = adj.shape[0]
+    sym = adj | adj.T
+    prop = jnp.where(sym, 0.0, jnp.inf).astype(jnp.float32)  # weight-0 arcs
+    labels = jnp.arange(n, dtype=jnp.float32)
+    return fixpoint_dense(MIN_PLUS, prop, labels, form="vector")
+
+
+# ---------------------------------------------------------------------------
+# Tuple PSN — Algorithm 1, faithfully
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EdbIndex:
+    """A base relation indexed for equi-joins on a column subset.
+
+    ``keys`` are the join columns packed+sorted; payload columns are gathered
+    into the same order.  This is the engine's build-side hash table.
+    """
+
+    keys: jax.Array  # (n,) int64 sorted
+    count: jax.Array  # () int32
+    cols: tuple[jax.Array, ...]  # full tuple columns, sorted by keys
+
+
+def build_edb_index(rows: np.ndarray, key_cols: tuple[int, ...], schema_bits: int) -> EdbIndex:
+    rows = np.asarray(rows, np.int64).reshape((len(rows), -1))
+    key_schema = Schema(tuple([schema_bits] * len(key_cols)))
+    keys = np.zeros((len(rows),), np.int64)
+    for c, shift in zip(key_cols, key_schema.shifts):
+        keys = keys | (rows[:, c] << shift)
+    order = np.argsort(keys, kind="stable")
+    return EdbIndex(
+        keys=jnp.asarray(keys[order]),
+        count=jnp.asarray(len(rows), jnp.int32),
+        cols=tuple(jnp.asarray(rows[order, i], jnp.int32) for i in range(rows.shape[1])),
+    )
+
+
+@dataclasses.dataclass
+class Bindings:
+    """Variable bindings flowing through a rule body (columnar)."""
+
+    cols: dict[str, jax.Array]  # var name -> (k,) int32/float32
+    valid: jax.Array  # (k,) bool
+    overflow: jax.Array  # () bool
+
+
+def join_edb(b: Bindings, index: EdbIndex, probe_vars, build_key_cols, intro, schema_bits, out_cap) -> Bindings:
+    """Join the binding table against an EDB index; introduce new columns."""
+    key_schema = Schema(tuple([schema_bits] * len(probe_vars)))
+    probe = key_schema.pack([b.cols[v] for v in probe_vars])
+    probe = jnp.where(b.valid, probe, EMPTY)
+    pi, bi, valid, ovf = expand_join(probe, b.valid, index.keys, index.count, out_cap)
+    cols = {v: c[pi] for v, c in b.cols.items()}
+    for var, col_idx in intro.items():
+        cols[var] = index.cols[col_idx][bi]
+    return Bindings(cols, valid, b.overflow | ovf)
+
+
+def join_idb_prefix(b: Bindings, table_keys, table_count, probe_vars, pred_schema: Schema,
+                    n_key_cols: int, values, intro_vars, out_cap) -> Bindings:
+    """Join bindings against an IDB table on a *prefix* of its columns.
+
+    IDB tables are sorted by their full packed tuple, hence sorted by any
+    column prefix; a range query over the high bits finds all matches without
+    re-indexing the (per-iteration-changing) table.
+    """
+    prefix_bits = sum(pred_schema.bits[:n_key_cols])
+    rem_shift = sum(pred_schema.bits[n_key_cols:])
+    key_schema = Schema(tuple(pred_schema.bits[:n_key_cols]))
+    probe_prefix = key_schema.pack([b.cols[v] for v in probe_vars])
+    lo_key = probe_prefix << rem_shift
+    hi_key = jnp.where(b.valid, (probe_prefix + 1) << rem_shift, EMPTY)
+    lo = jnp.searchsorted(table_keys, jnp.where(b.valid, lo_key, EMPTY))
+    hi = jnp.searchsorted(table_keys, hi_key)
+    hi = jnp.minimum(hi, table_count)
+    matches = jnp.where(b.valid, jnp.maximum(hi - lo, 0), 0)
+    offsets = jnp.cumsum(matches)
+    total = offsets[-1]
+    starts = offsets - matches
+    slot = jnp.arange(out_cap)
+    pidx = jnp.clip(jnp.searchsorted(offsets, slot, side="right"), 0, probe_prefix.shape[0] - 1)
+    rank = slot - starts[pidx]
+    tidx = jnp.clip(lo[pidx] + rank, 0, table_keys.shape[0] - 1)
+    valid = slot < jnp.minimum(total, out_cap)
+    cols = {v: c[pidx] for v, c in b.cols.items()}
+    unpacked = pred_schema.unpack(table_keys[tidx])
+    for var, col_idx in intro_vars.items():
+        if col_idx == "value":
+            cols[var] = values[tidx]
+        else:
+            cols[var] = unpacked[col_idx]
+    return Bindings(cols, valid, b.overflow | (total > out_cap))

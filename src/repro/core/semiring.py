@@ -1,0 +1,115 @@
+"""Semirings: the TPU-native carrier of aggregates-in-recursion.
+
+A PreM-transferred recursive rule with an extrema/count aggregate over a
+binary predicate *is* a matrix fixpoint over a semiring (DESIGN.md §3):
+
+    bool   (∨, ∧)      -- TC / CC reachability (plain Datalog recursion)
+    min-plus (min, +)  -- shortest paths, Example 2/3 of the paper
+    max-plus (max, +)  -- longest paths / critical paths (DAGs, or clamped)
+    plus-times (+, ×)  -- path counting, Example 5 (count/sum in recursion)
+
+``⊕``-idempotent semirings (bool/min/max) admit unconditional fixpoints; the
+additive one (+,×) requires the program to be acyclic/terminating, mirroring
+the paper's termination discussion for count/sum (§2.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    name: str
+    zero: float | int | bool  # ⊕ identity == "no fact"
+    one: float | int | bool  # ⊗ identity
+    add: Callable[[Array, Array], Array]  # ⊕, the aggregate
+    mul: Callable[[Array, Array], Array]  # ⊗, the join combine
+    idempotent: bool  # ⊕ idempotent => extrema-style PreM aggregate
+    dtype: object
+
+    def matmul(self, a: Array, b: Array, k_chunk: int = 64) -> Array:
+        """Blocked ⊕.⊗ matrix product (pure-jnp reference path).
+
+        The Pallas kernels in ``repro.kernels`` implement the same contraction
+        with explicit VMEM tiling; this path is the oracle and CPU fallback.
+        Tropical contractions stream the K dimension in chunks so the
+        (m, k, n) broadcast never materializes (the unchunked form needs
+        m·k·n·4 bytes — 137 GB/device on the 8192-vertex dry-run cell;
+        chunked it is m·k_chunk·n — see EXPERIMENTS.md §Perf, datalog cell).
+        """
+        if self.name == "bool":
+            # boolean semiring maps exactly onto an int matmul + threshold,
+            # which XLA lowers to the MXU on TPU.
+            return (jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32)) > 0)
+        if self.name == "plus_times":
+            return jnp.matmul(a, b)
+        # tropical: chunked broadcast-reduce.  a: (m, k), b: (k, n)
+        m, k = a.shape
+        n = b.shape[1]
+        red = jnp.min if self.name == "min_plus" else jnp.max
+        if k <= k_chunk:
+            return red(self.mul(a[:, :, None], b[None, :, :]), axis=1)
+        if k % k_chunk:
+            k_chunk = math.gcd(k, k_chunk) or 1
+        nch = k // k_chunk
+        init = jnp.full((m, n), self.zero, a.dtype)
+
+        def step(acc, i):
+            ak = jax.lax.dynamic_slice_in_dim(a, i * k_chunk, k_chunk, 1)
+            bk = jax.lax.dynamic_slice_in_dim(b, i * k_chunk, k_chunk, 0)
+            cand = red(self.mul(ak[:, :, None], bk[None, :, :]), axis=1)
+            return self.add(acc, cand), None
+
+        acc, _ = jax.lax.scan(step, init, jnp.arange(nch))
+        return acc
+
+    def vecmat(self, v: Array, b: Array) -> Array:
+        """Single-source variant: v: (k,), b: (k, n) -> (n,)."""
+        return self.matmul(v[None, :], b)[0]
+
+
+INF = jnp.float32(jnp.inf)
+
+BOOL = Semiring(
+    name="bool", zero=False, one=True,
+    add=jnp.logical_or, mul=jnp.logical_and,
+    idempotent=True, dtype=jnp.bool_,
+)
+
+MIN_PLUS = Semiring(
+    name="min_plus", zero=float("inf"), one=0.0,
+    add=jnp.minimum, mul=jnp.add,
+    idempotent=True, dtype=jnp.float32,
+)
+
+MAX_PLUS = Semiring(
+    name="max_plus", zero=float("-inf"), one=0.0,
+    add=jnp.maximum, mul=jnp.add,
+    idempotent=True, dtype=jnp.float32,
+)
+
+PLUS_TIMES = Semiring(
+    name="plus_times", zero=0.0, one=1.0,
+    add=jnp.add, mul=jnp.multiply,
+    idempotent=False, dtype=jnp.float32,
+)
+
+BY_NAME = {s.name: s for s in (BOOL, MIN_PLUS, MAX_PLUS, PLUS_TIMES)}
+
+#: aggregate name (as written in rule heads) -> semiring that carries it
+AGGREGATE_SEMIRING = {
+    "min": MIN_PLUS,
+    "max": MAX_PLUS,
+    "count": PLUS_TIMES,
+    "sum": PLUS_TIMES,
+    "mcount": PLUS_TIMES,
+    "msum": PLUS_TIMES,
+    None: BOOL,
+}

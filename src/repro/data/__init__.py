@@ -1,0 +1,7 @@
+from .graphs import (gnp_graph, graph_to_adj, graph_to_weighted, grid_graph,
+                     table6_scaled, tree_graph)
+from .tokens import TokenPipeline, masked_frame_batch, vlm_batch
+
+__all__ = ["tree_graph", "grid_graph", "gnp_graph", "graph_to_adj",
+           "graph_to_weighted", "table6_scaled", "TokenPipeline",
+           "masked_frame_batch", "vlm_batch"]

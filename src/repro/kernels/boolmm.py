@@ -1,0 +1,58 @@
+"""Boolean-semiring matmul Pallas kernel (TC/CC reachability join).
+
+The (∨,∧) product maps exactly onto an MXU matmul + nonzero test:
+``(A ⊗_bool B)[i,j] = Σ_k a_ik·b_kj > 0`` — so unlike min-plus this kernel
+rides the systolic array: f32 tiles, ``jnp.dot`` with f32 accumulation in a
+VMEM scratch, and a threshold epilogue on the last K step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _boolmm_kernel(a_ref, b_ref, o_ref, acc_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _epilogue():
+        o_ref[...] = acc_ref[...] > 0.0
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def bool_matmul(a: jax.Array, b: jax.Array, *, bm: int = DEFAULT_BM,
+                bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+                interpret: bool = False) -> jax.Array:
+    """(m, k) bool ⊗ (k, n) bool -> (m, n) bool."""
+    m, kk = a.shape
+    _, n = b.shape
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, kk)
+    assert m % bm == 0 and n % bn == 0 and kk % bk == 0, (a.shape, b.shape)
+    grid = (m // bm, n // bn, kk // bk)
+    return pl.pallas_call(
+        _boolmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.bool_),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a.astype(jnp.float32), b.astype(jnp.float32))

@@ -1,0 +1,113 @@
+"""Flash attention (forward) Pallas kernel: GQA, causal, sliding-window,
+logit softcap.
+
+Online-softmax over KV tiles with (m, l, acc) carried in VMEM scratch across
+the KV grid dimension.  Matches ``repro.models.layers.attention_reference``
+exactly (the test-suite sweeps shapes/dtypes/windows against it).  Backward
+is intentionally not a kernel here: training uses the rematerialized chunked
+attention in ``layers.attention_chunked`` (same math, O(s) memory); this
+kernel is the serving/prefill fast path.
+
+Layout: q (b, hq, sq, d), k/v (b, hkv, sk, d).  Grid (b·hq, sq/bq, sk/bk),
+KV innermost.  GQA is handled in the kv index_map (q-head -> kv-head), so no
+head replication is materialized.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window, softcap, bq: int, bk: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale  # (bq, d)
+    k = k_ref[0].astype(jnp.float32)  # (bk, d)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        ok &= q_pos >= k_pos
+    if window is not None:
+        ok &= (q_pos - k_pos) < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p, v_ref[0].astype(jnp.float32), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == pl.num_programs(2) - 1)
+    def _epilogue():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "scale", "bq", "bk", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    softcap: float | None = None, scale: float | None = None,
+                    bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                    interpret: bool = False) -> jax.Array:
+    """q: (b, hq, sq, d); k/v: (b, hkv, sk, d) -> (b, hq, sq, d)."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0
+    rep = hq // hkv
+    scale = scale or (1.0 / math.sqrt(d))
+    bq, bk = min(bq, sq), min(bk, sk)
+    assert sq % bq == 0 and sk % bk == 0
+
+    qf = q.reshape(b * hq, sq, d)
+    kf = k.reshape(b * hkv, sk, d)
+    vf = v.reshape(b * hkv, sk, d)
+    grid = (b * hq, sq // bq, sk // bk)
+
+    def kv_row(g):
+        # flattened q row g = bi*hq + h  ->  kv row bi*hkv + h // rep
+        return (g // hq) * hkv + (g % hq) // rep
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          window=window, softcap=softcap, bq=bq, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda g, iq, ik: (g, iq, 0)),
+            pl.BlockSpec((1, bk, d), lambda g, iq, ik: (kv_row(g), ik, 0)),
+            pl.BlockSpec((1, bk, d), lambda g, iq, ik: (kv_row(g), ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda g, iq, ik: (g, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, hq, sq, d)

@@ -1,0 +1,59 @@
+"""Tropical (min,+) matmul Pallas kernel — the PreM-transferred join⊕aggregate.
+
+One fixpoint iteration of the paper's Example 2 is ``D ⊕ D ⊗_min,+ A``; this
+kernel computes the ⊗ with explicit VMEM tiling.  min-plus has no MXU path
+(the MXU is a multiply-accumulate systolic array), so the contraction runs on
+the VPU as a blocked broadcast-add + min-reduce; the block shapes keep the
+(bm, bk, bn) broadcast inside VMEM and the lane dimension at 128.
+
+Grid: (M/bm, N/bn, K/bk), K innermost so the output tile accumulates in place
+across K steps (TPU grid execution is sequential over the minor dimension).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 32  # keeps the (bm, bk, bn) broadcast at 2 MB f32 in VMEM
+
+
+def _minplus_kernel(a_ref, b_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, jnp.inf)
+
+    a = a_ref[...]  # (bm, bk)
+    b = b_ref[...]  # (bk, bn)
+    cand = jnp.min(a[:, :, None] + b[None, :, :], axis=1)  # (bm, bn)
+    o_ref[...] = jnp.minimum(o_ref[...], cand)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def minplus_matmul(a: jax.Array, b: jax.Array, *, bm: int = DEFAULT_BM,
+                   bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+                   interpret: bool = False) -> jax.Array:
+    """(m, k) ⊗_min,+ (k, n) -> (m, n); inputs f32 with +inf for 'no fact'."""
+    m, kk = a.shape
+    k2, n = b.shape
+    assert kk == k2, (a.shape, b.shape)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, kk)
+    assert m % bm == 0 and n % bn == 0 and kk % bk == 0, (a.shape, b.shape, (bm, bn, bk))
+    grid = (m // bm, n // bn, kk // bk)
+    return pl.pallas_call(
+        _minplus_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a.astype(jnp.float32), b.astype(jnp.float32))

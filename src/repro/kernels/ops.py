@@ -1,0 +1,56 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+On the CPU container the kernels execute in ``interpret=True`` (the kernel
+body runs as JAX ops — semantics identical, performance irrelevant); on a
+TPU backend the same entry points compile to Mosaic.  ``auto_interpret``
+picks per-backend so library code can call these unconditionally.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .boolmm import bool_matmul
+from .flash_attention import flash_attention
+from .minplus import minplus_matmul
+from .relax import relax_step
+from .rglru_scan import rglru_scan
+
+
+def auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def minplus(a, b, **kw):
+    kw.setdefault("interpret", auto_interpret())
+    return minplus_matmul(a, b, **kw)
+
+
+def boolmm(a, b, **kw):
+    kw.setdefault("interpret", auto_interpret())
+    return bool_matmul(a, b, **kw)
+
+
+def relax(d, a, delta_mask, **kw):
+    kw.setdefault("interpret", auto_interpret())
+    return relax_step(d, a, delta_mask, **kw)
+
+
+def flash(q, k, v, **kw):
+    kw.setdefault("interpret", auto_interpret())
+    return flash_attention(q, k, v, **kw)
+
+
+def rglru(a, b, **kw):
+    kw.setdefault("interpret", auto_interpret())
+    return rglru_scan(a, b, **kw)
+
+
+def semiring_matmul(name: str):
+    """Kernel-backed ⊗ for the dense engine (bool / min_plus)."""
+    if name == "bool":
+        return boolmm
+    if name == "min_plus":
+        return minplus
+    raise KeyError(name)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def minplus_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    return jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+
+
+def boolmm_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return (a.astype(jnp.float32) @ b.astype(jnp.float32)) > 0
+
+
+def relax_ref(d: jax.Array, a: jax.Array, delta_mask: jax.Array):
+    d = d.astype(jnp.float32)
+    dm = jnp.where(delta_mask[:, None], d, jnp.inf)
+    cand = minplus_ref(dm, a.astype(jnp.float32))
+    merged = jnp.minimum(d, cand)
+    changed = jnp.any(merged < d, axis=1)
+    return merged, changed
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
+                        scale=None):
+    """q: (b, hq, sq, d); k/v: (b, hkv, sk, d)."""
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    scale = scale or (1.0 / math.sqrt(d))
+    kx = jnp.repeat(k, rep, axis=1).astype(jnp.float32)
+    vx = jnp.repeat(v, rep, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale, kx)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= qp >= kp
+    if window is not None:
+        ok &= (qp - kp) < window
+    s = jnp.where(ok, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vx).astype(q.dtype)
+
+
+def rglru_scan_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Associative-scan oracle: h_t = a_t h_{t-1} + b_t, h_0-exclusive."""
+
+    def combine(u, v):
+        a1, b1 = u
+        a2, b2 = v
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(
+        combine, (a.astype(jnp.float32), b.astype(jnp.float32)), axis=1)
+    return h

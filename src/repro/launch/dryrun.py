@@ -1,0 +1,287 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: .lower().compile() every (arch × shape × mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count at first
+backend init, and the production meshes need 512 placeholder host devices.
+Everything else imports after.
+
+Per cell this produces a JSON artifact with:
+  * compiled.memory_analysis()  — per-device bytes (proves it fits 16 GB HBM)
+  * compiled.cost_analysis()    — per-device FLOPs / bytes for §Roofline
+  * collective operand bytes parsed from the per-device HLO module
+  * the three roofline terms + dominant bottleneck
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod] [--subprocess]
+  python -m repro.launch.dryrun --datalog            # Datalog-engine cells
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, all_arch_names, get_config, shape_skip_reason
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (count_params, decode_input_specs, param_specs,
+                                train_input_specs)
+from repro.models.model import Model
+from repro.parallel.sharding import (activation_spec, batch_shardings,
+                                     cache_shardings, dp_axes, opt_shardings,
+                                     param_shardings, to_named)
+from repro.roofline.report import model_flops, roofline
+from repro.train import AdamWConfig, init_optimizer, make_serve_step, make_train_step
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+ART_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def _mem_dict(ma) -> dict:
+    return {
+        "argument_bytes": ma.argument_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "alias_bytes": ma.alias_size_in_bytes,
+        "peak_estimate_bytes": ma.argument_size_in_bytes + ma.temp_size_in_bytes
+        + ma.output_size_in_bytes - ma.alias_size_in_bytes,
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class CellOptions:
+    """§Perf iteration knobs (defaults = the paper-faithful baseline)."""
+
+    moe_groups: int = 1  # grouped (per-data-shard) MoE dispatch
+    accum: int = 1  # gradient accumulation microsteps
+    mlstm_chunk: int = 256  # mLSTM chunkwise block
+    serve_dtype: str = "float32"  # bf16 = cast params for serving cells
+    act_mode: str = "d"  # activation sharding: d | seq | none
+    block_remat: bool = False  # per-block (vs per-group) remat
+    tag: str = ""  # artifact suffix
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool,
+               opts: CellOptions = CellOptions()):
+    """Lower one cell; returns (lowered, n_chips, mflops, meta)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    model = Model(cfg, tp=mesh.shape["model"], use_chunked_attn=True, remat=True)
+    model.act_sharding = NamedSharding(
+        mesh, activation_spec(mesh, shape.global_batch, cfg.d_model,
+                              mode=opts.act_mode))
+    model.moe_dispatch_groups = opts.moe_groups
+    model.block_remat = opts.block_remat
+    if opts.mlstm_chunk != 256 and hasattr(model, "mlstm_spec"):
+        model.mlstm_spec = dataclasses.replace(model.mlstm_spec,
+                                               chunk=opts.mlstm_chunk)
+
+    pshapes = param_specs(model)
+    total, active = count_params(pshapes, cfg.top_k, cfg.n_experts)
+    if shape.kind != "train" and opts.serve_dtype == "bfloat16":
+        pshapes = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype),
+            pshapes)
+    p_sh = to_named(param_shardings(pshapes, mesh), mesh)
+    mflops = model_flops(cfg, shape, active, shape.kind == "train")
+    meta = {"params_total": total, "params_active": active,
+            "opts": dataclasses.asdict(opts)}
+
+    if shape.kind == "train":
+        oshapes = jax.eval_shape(init_optimizer, pshapes)
+        o_sh = to_named(opt_shardings(oshapes, mesh), mesh)
+        bspecs = train_input_specs(cfg, shape)
+        b_sh = to_named(batch_shardings(bspecs, mesh), mesh)
+        step = make_train_step(model, AdamWConfig(), accum_steps=opts.accum)
+        with mesh:
+            lowered = jax.jit(
+                step, in_shardings=(p_sh, o_sh, b_sh),
+                out_shardings=(p_sh, o_sh, None),
+            ).lower(pshapes, oshapes, bspecs)
+    elif shape.kind == "prefill":
+        bspecs = train_input_specs(cfg, shape, with_labels=False)
+        b_sh = to_named(batch_shardings(bspecs, mesh), mesh)
+
+        def prefill(params, batch):
+            logits, _ = model.forward(params, batch)
+            return logits[:, -1, :]
+
+        with mesh:
+            lowered = jax.jit(prefill, in_shardings=(p_sh, b_sh)).lower(pshapes, bspecs)
+    else:  # decode
+        cache_shapes, tok, pos = decode_input_specs(model, shape)
+        c_sh = to_named(cache_shardings(cache_shapes, mesh), mesh)
+        dp = dp_axes(mesh)
+        t_sh = NamedSharding(
+            mesh, P(dp if shape.global_batch % mesh.shape["data"] == 0 else None))
+        step = make_serve_step(model)
+        with mesh:
+            lowered = jax.jit(
+                step, in_shardings=(p_sh, c_sh, t_sh, NamedSharding(mesh, P())),
+                out_shardings=(t_sh, None, c_sh),
+                donate_argnums=(1,),  # cache updates alias in place
+            ).lower(pshapes, cache_shapes, tok, pos)
+    return lowered, n_chips, mflops, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: Path = ART_DIR, save_hlo: bool = False,
+             opts: CellOptions = CellOptions()) -> dict:
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_tag}"
+    if opts.tag:
+        cell_id += f"__{opts.tag}"
+    out_dir.mkdir(parents=True, exist_ok=True)
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                 "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+                 "kind": shape.kind}
+    skip = shape_skip_reason(cfg, shape)
+    if skip:
+        rec.update(status="skip", reason=skip)
+    else:
+        t0 = time.time()
+        try:
+            lowered, n_chips, mflops, meta = build_cell(arch, shape_name,
+                                                        multi_pod, opts)
+            compiled = lowered.compile()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+            ma = compiled.memory_analysis()
+            terms = roofline(cost, hlo, n_chips, mflops)
+            rec.update(
+                status="ok", n_chips=n_chips, compile_s=round(time.time() - t0, 1),
+                memory=_mem_dict(ma),
+                cost={"flops_per_device": float(cost.get("flops", 0.0)),
+                      "bytes_per_device": float(cost.get("bytes accessed", 0.0))},
+                roofline=terms.as_dict(), **meta,
+            )
+            if save_hlo:
+                (out_dir / f"{cell_id}.hlo.txt").write_text(hlo)
+        except Exception as e:  # noqa: BLE001 — farm must survive cell failures
+            rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                       traceback=traceback.format_exc()[-4000:])
+    (out_dir / f"{cell_id}.json").write_text(json.dumps(rec, indent=1))
+    status = rec["status"]
+    extra = rec.get("reason", rec.get("error", ""))[:100]
+    print(f"[dryrun] {cell_id}: {status} {extra}", flush=True)
+    return rec
+
+
+def run_datalog_cells(multi_pod: bool, out_dir: Path = ART_DIR) -> None:
+    """Dry-run the paper's own distributed plans on the production mesh."""
+    import numpy as np
+    from repro.core import distributed as D
+
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n = 8192  # dense relation vertex count for the dry-run
+    cells = {
+        "datalog-tc-decomposable": lambda: jax.jit(
+            functools.partial(D.tc_decomposable, mesh)).lower(
+                jax.ShapeDtypeStruct((n, n), jnp.bool_)),
+        "datalog-spath-minplus": lambda: jax.jit(
+            functools.partial(D.spath_decomposable, mesh)).lower(
+                jax.ShapeDtypeStruct((n, n), jnp.float32)),
+        "datalog-sg-allreduce": lambda: jax.jit(
+            functools.partial(D.sg_allreduce, mesh)).lower(
+                jax.ShapeDtypeStruct((n, n), jnp.bool_)),
+    }
+    for name, build in cells.items():
+        rec = {"arch": name, "shape": f"n{n}", "mesh": mesh_tag, "kind": "datalog"}
+        t0 = time.time()
+        try:
+            lowered = build()
+            compiled = lowered.compile()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+            terms = roofline(cost, hlo, mesh.size, 2.0 * n * n * n)
+            rec.update(status="ok", compile_s=round(time.time() - t0, 1),
+                       memory=_mem_dict(compiled.memory_analysis()),
+                       cost={"flops_per_device": float(cost.get("flops", 0.0)),
+                             "bytes_per_device": float(cost.get("bytes accessed", 0.0))},
+                       roofline=terms.as_dict())
+        except Exception as e:  # noqa: BLE001
+            rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                       traceback=traceback.format_exc()[-4000:])
+        out = out_dir / f"{rec['arch']}__n{n}__{mesh_tag}.json"
+        out.write_text(json.dumps(rec, indent=1))
+        print(f"[dryrun] {rec['arch']} ({mesh_tag}): {rec['status']} "
+              f"{rec.get('error','')[:100]}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--datalog", action="store_true")
+    ap.add_argument("--subprocess", action="store_true",
+                    help="isolate each cell in a child process (farm mode)")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--out", default=str(ART_DIR))
+    # §Perf iteration knobs
+    ap.add_argument("--moe-groups", type=int, default=1)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--mlstm-chunk", type=int, default=256)
+    ap.add_argument("--serve-dtype", default="float32")
+    ap.add_argument("--act-mode", default="d", choices=["d", "seq", "none"])
+    ap.add_argument("--block-remat", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+    opts = CellOptions(moe_groups=args.moe_groups, accum=args.accum,
+                       mlstm_chunk=args.mlstm_chunk,
+                       serve_dtype=args.serve_dtype, act_mode=args.act_mode,
+                       block_remat=args.block_remat, tag=args.tag)
+
+    if args.datalog:
+        for mp in ([False, True] if args.both_meshes else [args.multi_pod]):
+            run_datalog_cells(mp, out_dir)
+        return
+
+    if args.all:
+        meshes = [False, True] if args.both_meshes else [args.multi_pod]
+        for arch in all_arch_names():
+            for shape in SHAPES:
+                for mp in meshes:
+                    cell = f"{arch}__{shape}__{'pod2x16x16' if mp else 'pod16x16'}"
+                    if (out_dir / f"{cell}.json").exists():
+                        rec = json.loads((out_dir / f"{cell}.json").read_text())
+                        if rec.get("status") in ("ok", "skip"):
+                            print(f"[dryrun] {cell}: cached {rec['status']}", flush=True)
+                            continue
+                    if args.subprocess:
+                        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                               "--arch", arch, "--shape", shape, "--out", str(out_dir)]
+                        if mp:
+                            cmd.append("--multi-pod")
+                        if args.save_hlo:
+                            cmd.append("--save-hlo")
+                        subprocess.run(cmd, check=False)
+                    else:
+                        run_cell(arch, shape, mp, out_dir, args.save_hlo)
+        return
+
+    assert args.arch and args.shape, "--arch/--shape or --all required"
+    run_cell(args.arch, args.shape, args.multi_pod, out_dir, args.save_hlo,
+             opts=opts)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state): (16, 16) = one v5e pod's worth of 256 chips as
+(data, model); multi_pod adds the leading "pod" axis — (2, 16, 16) for the
+dry-run, but any pod count works because the sharding rules treat
+("pod", "data") as one composed DP/FSDP dimension (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import numpy as np
+    ndev = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < ndev:
+        raise RuntimeError(
+            f"need {ndev} devices for the production mesh, have {len(devs)}; "
+            "run through repro.launch.dryrun (it sets "
+            "--xla_force_host_platform_device_count=512 before any jax import)")
+    return jax.make_mesh(shape, axes, devices=devs[:ndev],
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_worker_mesh(n_workers: int, axis: str = "data"):
+    """1-D mesh for the Datalog distributed plans / scale-out benches."""
+    return jax.make_mesh((n_workers,), (axis,),
+                         axis_types=(jax.sharding.AxisType.Auto,))

@@ -1,0 +1,79 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` returns the exact pytree the corresponding step
+function consumes:
+  * train:   {tokens/frames/embeds, labels [, mask, positions]}
+  * prefill: the same minus labels
+  * decode:  (cache_shapes, tokens (b,), pos ())
+
+Modality frontends are stubs per the assignment: HuBERT receives precomputed
+frame embeddings (b, s, d_model); Qwen2-VL receives fused patch/token
+embeddings plus 3-stream M-RoPE position ids.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import SHAPES, ArchConfig, ShapeSpec
+from ..models.model import Model
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_input_specs(cfg: ArchConfig, shape: ShapeSpec, with_labels: bool = True) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    out: dict = {}
+    if cfg.input_kind == "tokens":
+        out["tokens"] = SDS((B, S), jnp.int32)
+    elif cfg.input_kind == "frames":
+        out["frames"] = SDS((B, S, cfg.d_model), jnp.bfloat16)
+        if with_labels:
+            out["mask"] = SDS((B, S), jnp.bool_)
+    else:  # vlm
+        out["embeds"] = SDS((B, S, cfg.d_model), jnp.bfloat16)
+        out["positions"] = SDS((B, S, 3), jnp.int32)
+    if with_labels:
+        out["labels"] = SDS((B, S), jnp.int32)
+    return out
+
+
+def decode_input_specs(model: Model, shape: ShapeSpec):
+    """(cache, tokens, pos) ShapeDtypeStructs for a decode cell.
+
+    The KV-cache length is the shape's seq_len (the state the assignment asks
+    the decode step to carry); windowed/recurrent layers bound their own state
+    via the model's cache rules.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(functools.partial(model.init_cache, B, S))
+    tokens = SDS((B,), jnp.int32)
+    pos = SDS((), jnp.int32)
+    return cache, tokens, pos
+
+
+def param_specs(model: Model):
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def count_params(param_shapes, top_k: int = 0, n_experts: int = 0) -> tuple[int, int]:
+    """(total, active) parameter counts; MoE experts count as top_k/E active."""
+    total = active = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(param_shapes)[0]:
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        is_expert = any(
+            isinstance(k, jax.tree_util.DictKey) and k.key in ("w_gate", "w_up", "w_down")
+            for k in path
+        ) and any(
+            isinstance(k, jax.tree_util.DictKey) and k.key == "moe" for k in path
+        )
+        if is_expert and n_experts:
+            active += n * top_k // n_experts
+        else:
+            active += n
+    return total, active

@@ -1,0 +1,51 @@
+"""Training launcher: any assigned arch (smoke or full) through the
+fault-tolerant driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-14b --smoke \
+        --steps 50 --batch 8 --seq 64
+
+Full-size configs on a real TPU host would use the same entry point with the
+production mesh (the dry-run proves those lower+compile); on this CPU
+container full configs are compile-only.
+"""
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.data.tokens import TokenPipeline
+from repro.models.model import Model
+from repro.runtime import DriverConfig, TrainDriver, run_with_restarts
+from repro.train import AdamWConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if cfg.input_kind != "tokens":
+        raise SystemExit(f"{args.arch}: use examples/ for frames/vlm pipelines")
+    model = Model(cfg, tp=1, use_chunked_attn=False, remat=False)
+    pipe = TokenPipeline(vocab=cfg.vocab, seq_len=args.seq,
+                         global_batch=args.batch, seed=0)
+    opt = AdamWConfig(lr=args.lr, warmup_steps=10, total_steps=args.steps)
+    dcfg = DriverConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                        max_steps=args.steps, log_every=10)
+
+    driver = run_with_restarts(
+        lambda: TrainDriver(model, opt, pipe, dcfg), args.steps)
+    print(f"finished at step {driver.step}; "
+          f"final loss {driver.metrics_log[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,307 @@
+"""Core transformer layers — pure-JAX, explicit dtypes, init/apply pairs.
+
+No flax: parameters are nested dicts of jax.Arrays; every module is a pair of
+``init_*(key, cfg) -> params`` and ``apply(params, x, ...) -> y`` functions.
+Compute dtype is bf16 with fp32 accumulation where it matters (norms, softmax,
+logits); master params are fp32 (cast at use).
+
+Attention comes in two interchangeable implementations:
+  * ``attention_reference`` — plain einsum (the oracle; used by smoke tests)
+  * ``attention_chunked``   — online-softmax over KV chunks (a pure-JAX flash
+    equivalent: O(s) memory, the same math) — the default for long sequences
+    and the lowering target for the dry-run; the Pallas flash kernel in
+    ``repro.kernels.flash_attention`` is the TPU drop-in with identical
+    semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+DEFAULT_COMPUTE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32) -> Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int) -> dict:
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+def rmsnorm(params: dict, x: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"])).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (RoPE + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x: (b, s, h, d); positions: (b, s) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (b, s, d/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: Array, positions3: Array, sections: tuple[int, int, int],
+                theta: float = 10000.0) -> Array:
+    """Multimodal RoPE (Qwen2-VL): three position streams (t, h, w) drive
+    disjoint frequency sections.  x: (b, s, h, d); positions3: (b, s, 3)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (d/2,)
+    sec = jnp.concatenate([
+        jnp.full((sections[0],), 0, jnp.int32),
+        jnp.full((sections[1],), 1, jnp.int32),
+        jnp.full((sections[2],), 2, jnp.int32),
+    ])  # (d/2,) -> which stream drives each frequency
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32), sec[None, None, :].astype(jnp.int32),
+        axis=-1)  # (b, s, d/2)
+    angles = pos * freqs
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    n_heads: int  # padded query heads (divisible by TP)
+    n_kv_heads: int
+    head_dim: int
+    causal: bool = True
+    window: int | None = None  # sliding/local window (None = full)
+    softcap: float | None = None
+    scale: float | None = None
+
+
+def _mask_bias(spec: AttnSpec, q_pos: Array, k_pos: Array, dtype) -> Array:
+    """(…, q, k) additive bias from causality + locality."""
+    neg = jnp.asarray(-1e30, jnp.float32)
+    ok = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), bool)
+    if spec.causal:
+        ok &= q_pos[:, None] >= k_pos[None, :]
+    if spec.window is not None:
+        ok &= (q_pos[:, None] - k_pos[None, :]) < spec.window
+    return jnp.where(ok, 0.0, neg)
+
+
+def attention_reference(spec: AttnSpec, q: Array, k: Array, v: Array,
+                        q_pos: Array, k_pos: Array) -> Array:
+    """q: (b, sq, hq, d); k/v: (b, sk, hkv, d). GQA by head repetition."""
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    rep = hq // hkv
+    scale = spec.scale or (1.0 / math.sqrt(d))
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qf = qf.reshape(b, sq, hkv, rep, d)
+    scores = jnp.einsum("bqhrd,bkhd->bhrqk", qf, kf)
+    if spec.softcap is not None:
+        scores = spec.softcap * jnp.tanh(scores / spec.softcap)
+    scores = scores + _mask_bias(spec, q_pos, k_pos, scores.dtype)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", p, vf)
+    return out.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def attention_chunked(spec: AttnSpec, q: Array, k: Array, v: Array,
+                      q_pos: Array, k_pos: Array, chunk: int = 512) -> Array:
+    """Online-softmax attention over KV chunks (flash-equivalent, O(s) memory).
+
+    Numerically identical (up to fp assoc.) to the reference; this is the
+    shape the Pallas kernel implements with VMEM tiles.
+    """
+    b, sq, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    scale = spec.scale or (1.0 / math.sqrt(d))
+    if sk % chunk:
+        chunk = sk  # fall back to single chunk for ragged sizes
+    nchunks = sk // chunk
+
+    qf = (q.astype(jnp.float32) * scale).reshape(b, sq, hkv, rep, d)
+
+    def step(carry, ci):
+        m, l, acc = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, ci * chunk, chunk, 1).astype(jnp.float32)
+        vs = jax.lax.dynamic_slice_in_dim(v, ci * chunk, chunk, 1).astype(jnp.float32)
+        kp = jax.lax.dynamic_slice_in_dim(k_pos, ci * chunk, chunk, 0)
+        s = jnp.einsum("bqhrd,bkhd->bhrqk", qf, ks)
+        if spec.softcap is not None:
+            s = spec.softcap * jnp.tanh(s / spec.softcap)
+        s = s + _mask_bias(spec, q_pos, kp, s.dtype)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bhrqk,bkhd->bhrqd", p, vs)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, rep, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, rep, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, rep, sq, d), jnp.float32)
+    # remat the chunk step: backward recomputes chunk scores instead of
+    # saving s×s intermediates — the flash-attention memory behaviour
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(step), (m0, l0, a0),
+                                  jnp.arange(nchunks))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, hq, d)
+    return out.astype(q.dtype)
+
+
+def decode_attention(spec: AttnSpec, q: Array, k_cache: Array, v_cache: Array,
+                     q_pos: Array, k_pos: Array) -> Array:
+    """Single-token decode: q (b, 1, hq, d); caches (b, S, hkv, d).
+
+    ``k_pos`` (S,) holds the absolute position stored in each cache slot
+    (-1 = unfilled); ring-buffer SWA caches work unchanged because masking is
+    by absolute position, not slot index.
+    """
+    b, _, hq, d = q.shape
+    S, hkv = k_cache.shape[1], k_cache.shape[2]
+    rep = hq // hkv
+    scale = spec.scale or (1.0 / math.sqrt(d))
+    qf = (q.astype(jnp.float32) * scale).reshape(b, hkv, rep, d)
+    s = jnp.einsum("bhrd,bkhd->bhrk", qf, k_cache.astype(jnp.float32))
+    if spec.softcap is not None:
+        s = spec.softcap * jnp.tanh(s / spec.softcap)
+    ok = (k_pos[None, :] >= 0) & (k_pos[None, :] <= q_pos[:, None])  # (b, S)
+    if spec.window is not None:
+        ok &= (q_pos[:, None] - k_pos[None, :]) < spec.window
+    s = jnp.where(ok[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhrk,bkhd->bhrd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block (projections + norms + rope)
+# ---------------------------------------------------------------------------
+
+
+def attn_block_init(key, d_model: int, spec: AttnSpec, qk_norm: bool) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d_model, spec.n_heads * spec.head_dim),
+        "wk": dense_init(ks[1], d_model, spec.n_kv_heads * spec.head_dim),
+        "wv": dense_init(ks[2], d_model, spec.n_kv_heads * spec.head_dim),
+        "wo": dense_init(ks[3], spec.n_heads * spec.head_dim, d_model),
+    }
+    if qk_norm:
+        p["q_norm"] = rmsnorm_init(spec.head_dim)
+        p["k_norm"] = rmsnorm_init(spec.head_dim)
+    return p
+
+
+def attn_qkv(params: dict, spec: AttnSpec, x: Array, positions, theta: float,
+             mrope_sections=None, compute=DEFAULT_COMPUTE):
+    b, s, _ = x.shape
+    q = (x @ params["wq"].astype(compute)).reshape(b, s, spec.n_heads, spec.head_dim)
+    k = (x @ params["wk"].astype(compute)).reshape(b, s, spec.n_kv_heads, spec.head_dim)
+    v = (x @ params["wv"].astype(compute)).reshape(b, s, spec.n_kv_heads, spec.head_dim)
+    if "q_norm" in params:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    if mrope_sections is not None:
+        q = apply_mrope(q, positions, mrope_sections, theta)
+        k = apply_mrope(k, positions, mrope_sections, theta)
+    elif positions is not None:
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def attn_out(params: dict, spec: AttnSpec, o: Array, compute=DEFAULT_COMPUTE) -> Array:
+    b, s = o.shape[:2]
+    return o.reshape(b, s, spec.n_heads * spec.head_dim) @ params["wo"].astype(compute)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model: int, d_ff: int, gated: bool = True) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], d_model, d_ff),
+         "w_down": dense_init(ks[1], d_ff, d_model)}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff)
+    return p
+
+
+def mlp(params: dict, x: Array, act: str = "silu", compute=DEFAULT_COMPUTE) -> Array:
+    up = x @ params["w_up"].astype(compute)
+    fn = {"silu": jax.nn.silu, "gelu": functools.partial(jax.nn.gelu, approximate=True)}[act]
+    if "w_gate" in params:
+        h = fn(x @ params["w_gate"].astype(compute)) * up
+    else:
+        h = fn(up)
+    return h @ params["w_down"].astype(compute)
+
+
+# ---------------------------------------------------------------------------
+# logits / softcap
+# ---------------------------------------------------------------------------
+
+
+def softcap(x: Array, cap: float | None) -> Array:
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def cross_entropy(logits: Array, labels: Array, mask: Array | None = None) -> Array:
+    """Mean CE in fp32. logits (..., V); labels (...) int; mask optional."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return (nll * m).sum() / jnp.maximum(m.sum(), 1.0)
+    return nll.mean()

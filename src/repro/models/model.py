@@ -1,0 +1,364 @@
+"""Model assembly: ArchConfig -> init / forward / loss / decode_step.
+
+Layer stacks are organized as repeating *superblocks* (``cfg.pattern``) plus a
+``cfg.tail`` remainder; parameters for each block type are stacked with a
+leading (n_groups, k) axis and the forward pass is a ``jax.lax.scan`` over
+groups (small HLO, fast compiles, and the natural substrate for a future
+pipeline-parallel stage axis).  Blocks:
+
+  attn   pre-norm GQA attention (+RoPE/M-RoPE/qk-norm/softcap) + gated MLP
+  local  same, sliding-window mask (gemma2 local / recurrentgemma / SWA)
+  enc    bidirectional attention + MLP (HuBERT)
+  moe    attention + mixture-of-experts FFN (Mixtral; SWA window)
+  rg     RG-LRU recurrent block + MLP (RecurrentGemma)
+  mlstm / slstm   xLSTM blocks (internal expansion, no separate FFN)
+
+Decode carries a cache pytree congruent with the parameter stacking so the
+same group-scan drives single-token decoding: windowed layers use ring
+buffers (O(window) state), recurrent layers carry O(1) state — which is what
+makes the ``long_500k`` shape feasible for the sub-quadratic families.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import recurrent as rec
+from .layers import (DEFAULT_COMPUTE, AttnSpec, attention_chunked,
+                     attention_reference, attn_block_init, attn_out, attn_qkv,
+                     cross_entropy, decode_attention, dense_init, embed_init,
+                     mlp, mlp_init, rmsnorm, rmsnorm_init, softcap)
+from .moe import MoeSpec, moe_apply, moe_init
+
+Array = jax.Array
+
+ATTN_TYPES = ("attn", "local", "enc", "moe")
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig, tp: int = 1, use_chunked_attn: bool | None = None,
+                 remat: bool = True):
+        self.cfg = cfg
+        self.tp = tp
+        self.q_heads = cfg.padded_heads(tp)
+        self.vocab = cfg.padded_vocab(256 if cfg.vocab > 1000 else 16)
+        self.remat = remat
+        # optional NamedSharding constraint on (b, s, d) activations at block
+        # boundaries — set by the launcher for distributed runs
+        self.act_sharding = None
+        # MoE dispatch locality: one group per data shard on a mesh (§Perf)
+        self.moe_dispatch_groups = 1
+        # block-granular remat inside the group scan: bounds the live
+        # scan-carry stacks of recurrent blocks to one layer (§Perf, xlstm)
+        self.block_remat = False
+        # chunked attention by default for long sequences (flash-equivalent)
+        self.use_chunked_attn = use_chunked_attn
+        self.specs: dict[str, AttnSpec] = {}
+        for t in set(cfg.pattern) | set(cfg.tail):
+            if t in ATTN_TYPES:
+                window = cfg.window if t in ("local", "moe") else None
+                self.specs[t] = AttnSpec(
+                    n_heads=self.q_heads, n_kv_heads=cfg.n_kv_heads,
+                    head_dim=cfg.head_dim, causal=cfg.causal and t != "enc",
+                    window=window, softcap=cfg.attn_softcap, scale=cfg.attn_scale,
+                )
+        if cfg.rnn_width:
+            self.rg_spec = rec.RglruSpec(cfg.d_model, cfg.rnn_width)
+        if "mlstm" in cfg.pattern:
+            self.mlstm_spec = rec.MlstmSpec(cfg.d_model, cfg.mlstm_heads, cfg.mlstm_proj)
+        if "slstm" in cfg.pattern:
+            self.slstm_spec = rec.SlstmSpec(cfg.d_model, cfg.mlstm_heads)
+
+    # ------------------------------------------------------------------ init
+
+    def _init_block(self, key, ltype: str) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        p: dict[str, Any] = {"ln1": rmsnorm_init(cfg.d_model)}
+        if ltype in ATTN_TYPES:
+            p["attn"] = attn_block_init(ks[0], cfg.d_model, self.specs[ltype], cfg.qk_norm)
+            p["ln2"] = rmsnorm_init(cfg.d_model)
+            if ltype == "moe":
+                p["moe"] = moe_init(ks[1], MoeSpec(cfg.n_experts, cfg.top_k,
+                                                   cfg.d_model, cfg.d_ff,
+                                                   cfg.capacity_factor))
+            else:
+                p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, gated=True)
+            if cfg.post_norm:
+                p["ln1_post"] = rmsnorm_init(cfg.d_model)
+                p["ln2_post"] = rmsnorm_init(cfg.d_model)
+        elif ltype == "rg":
+            p["rg"] = rec.rglru_init(ks[0], self.rg_spec)
+            p["ln2"] = rmsnorm_init(cfg.d_model)
+            p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, gated=True)
+        elif ltype == "mlstm":
+            p["mlstm"] = rec.mlstm_init(ks[0], self.mlstm_spec)
+        elif ltype == "slstm":
+            p["slstm"] = rec.slstm_init(ks[0], self.slstm_spec)
+        else:
+            raise ValueError(ltype)
+        return p
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, 4)
+        params: dict[str, Any] = {}
+        if cfg.input_kind in ("tokens", "vlm"):
+            params["embed"] = embed_init(keys[0], self.vocab, cfg.d_model)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(keys[1], cfg.d_model, self.vocab)
+        params["final_norm"] = rmsnorm_init(cfg.d_model)
+
+        G = cfg.n_groups
+        groups: dict[str, Any] = {}
+        kb = jax.random.split(keys[2], len(cfg.pattern) * G).reshape(G, len(cfg.pattern), 2)
+        for i, lt in enumerate(cfg.pattern):
+            # one stacked pytree per pattern *slot* (type may repeat; slots are
+            # independent parameters): leading dim G
+            slot = jax.vmap(lambda k, lt=lt: self._init_block(k, lt))(kb[:, i])
+            groups[f"{i}:{lt}"] = slot
+        params["groups"] = groups
+        if cfg.tail:
+            kt = jax.random.split(keys[3], len(cfg.tail))
+            params["tail"] = {f"{i}:{lt}": self._init_block(kt[i], lt)
+                              for i, lt in enumerate(cfg.tail)}
+        return params
+
+    # --------------------------------------------------------------- forward
+
+    def _attention(self, spec: AttnSpec, q, k, v, q_pos, k_pos):
+        s = q.shape[1]
+        use_chunked = self.use_chunked_attn
+        if use_chunked is None:
+            use_chunked = s >= 8192
+        if use_chunked:
+            return attention_chunked(spec, q, k, v, q_pos, k_pos)
+        return attention_reference(spec, q, k, v, q_pos, k_pos)
+
+    def _apply_block(self, ltype: str, p: dict, x: Array, positions) -> tuple[Array, Array]:
+        """Full-sequence block application. Returns (x, aux_loss)."""
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        if ltype in ATTN_TYPES:
+            spec = self.specs[ltype]
+            h = rmsnorm(p["ln1"], x)
+            rope_pos = positions if cfg.use_rope else None
+            q, k, v = attn_qkv(p["attn"], spec, h, rope_pos, cfg.rope_theta,
+                               cfg.mrope_sections if cfg.input_kind == "vlm" else None)
+            mask_pos = positions if positions.ndim == 2 else positions[..., 0]
+            o = self._attention(spec, q, k, v, mask_pos[0], mask_pos[0])
+            o = attn_out(p["attn"], spec, o)
+            if cfg.post_norm:
+                o = rmsnorm(p["ln1_post"], o)
+            x = x + o
+            h2 = rmsnorm(p["ln2"], x)
+            if ltype == "moe":
+                y, aux = moe_apply(p["moe"], MoeSpec(cfg.n_experts, cfg.top_k,
+                                                     cfg.d_model, cfg.d_ff,
+                                                     cfg.capacity_factor), h2,
+                                   dispatch_groups=self.moe_dispatch_groups,
+                                   group_sharding=self.act_sharding)
+            else:
+                y = mlp(p["mlp"], h2, cfg.act)
+            if cfg.post_norm:
+                y = rmsnorm(p["ln2_post"], y)
+            x = x + y
+        elif ltype == "rg":
+            h = rmsnorm(p["ln1"], x)
+            x = x + rec.rglru_seq(p["rg"], self.rg_spec, h)
+            h2 = rmsnorm(p["ln2"], x)
+            x = x + mlp(p["mlp"], h2, cfg.act)
+        elif ltype == "mlstm":
+            h = rmsnorm(p["ln1"], x)
+            x = x + rec.mlstm_seq(p["mlstm"], self.mlstm_spec, h)
+        elif ltype == "slstm":
+            h = rmsnorm(p["ln1"], x)
+            y, _ = rec.slstm_scan(p["slstm"], self.slstm_spec, h)
+            x = x + y
+        return x, aux
+
+    def _embed_in(self, params, batch) -> tuple[Array, Array]:
+        cfg = self.cfg
+        if cfg.input_kind == "tokens":
+            x = params["embed"].astype(DEFAULT_COMPUTE)[batch["tokens"]]
+            b, s = batch["tokens"].shape
+            positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        elif cfg.input_kind == "frames":
+            x = batch["frames"].astype(DEFAULT_COMPUTE)
+            b, s = x.shape[:2]
+            positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        else:  # vlm
+            x = batch["embeds"].astype(DEFAULT_COMPUTE)
+            positions = batch["positions"]  # (b, s, 3)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+        return x, positions
+
+    def forward(self, params: dict, batch: dict) -> tuple[Array, Array]:
+        """Returns (logits (b, s, V), aux_loss)."""
+        cfg = self.cfg
+        x, positions = self._embed_in(params, batch)
+
+        def group_step(carry, pg):
+            x, aux = carry
+            if self.act_sharding is not None:
+                x = jax.lax.with_sharding_constraint(x, self.act_sharding)
+            for i, lt in enumerate(cfg.pattern):
+                if self.block_remat:
+                    x, a = jax.checkpoint(
+                        lambda xx, pp, lt=lt: self._apply_block(lt, pp, xx, positions)
+                    )(x, pg[f"{i}:{lt}"])
+                else:
+                    x, a = self._apply_block(lt, pg[f"{i}:{lt}"], x, positions)
+                aux = aux + a
+            return (x, aux), None
+
+        step = jax.checkpoint(group_step) if self.remat else group_step
+        (x, aux), _ = jax.lax.scan(step, (x, jnp.zeros((), jnp.float32)),
+                                   params["groups"])
+        for i, lt in enumerate(cfg.tail):
+            x, a = self._apply_block(lt, params["tail"][f"{i}:{lt}"], x, positions)
+            aux = aux + a
+        x = rmsnorm(params["final_norm"], x)
+        head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+        logits = x @ head.astype(x.dtype)
+        logits = softcap(logits, cfg.final_softcap)
+        return logits, aux
+
+    def loss(self, params: dict, batch: dict) -> Array:
+        logits, aux = self.forward(params, batch)
+        mask = batch.get("mask")
+        ce = cross_entropy(logits, batch["labels"], mask)
+        return ce + 0.01 * aux
+
+    # ---------------------------------------------------------------- decode
+
+    def cache_len(self, ltype: str, max_len: int) -> int:
+        spec = self.specs.get(ltype)
+        if spec is not None and spec.window is not None:
+            return min(max_len, spec.window)
+        return max_len
+
+    def _init_block_cache(self, ltype: str, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        if ltype in ATTN_TYPES:
+            S = self.cache_len(ltype, max_len)
+            kv = cfg.n_kv_heads
+            return {
+                "k": jnp.zeros((batch, S, kv, cfg.head_dim), DEFAULT_COMPUTE),
+                "v": jnp.zeros((batch, S, kv, cfg.head_dim), DEFAULT_COMPUTE),
+                "pos": jnp.full((S,), -1, jnp.int32),
+            }
+        if ltype == "rg":
+            return rec.rglru_state_init(batch, self.rg_spec)
+        if ltype == "mlstm":
+            return rec.mlstm_state_init(batch, self.mlstm_spec)
+        if ltype == "slstm":
+            h, c, n, m = rec.slstm_state_init(batch, self.slstm_spec)
+            return {"h": h, "c": c, "n": n, "m": m}
+        raise ValueError(ltype)
+
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        G = cfg.n_groups
+        groups = {}
+        for i, lt in enumerate(cfg.pattern):
+            one = self._init_block_cache(lt, batch, max_len)
+            groups[f"{i}:{lt}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (G,) + a.shape), one)
+        cache = {"groups": groups}
+        if cfg.tail:
+            cache["tail"] = {f"{i}:{lt}": self._init_block_cache(lt, batch, max_len)
+                             for i, lt in enumerate(cfg.tail)}
+        return cache
+
+    def _decode_block(self, ltype: str, p: dict, c: dict, x: Array, pos: Array):
+        """x: (b, 1, d); pos: () int32 absolute position. Returns (x, cache')."""
+        cfg = self.cfg
+        if ltype in ATTN_TYPES:
+            spec = self.specs[ltype]
+            S = c["k"].shape[1]
+            h = rmsnorm(p["ln1"], x)
+            bpos = jnp.broadcast_to(pos[None], (x.shape[0], 1)).astype(jnp.int32)
+            rope_pos = bpos if cfg.use_rope else None
+            if cfg.input_kind == "vlm":
+                q, k, v = attn_qkv(p["attn"], spec, h,
+                                   jnp.broadcast_to(pos, (x.shape[0], 1, 3)).astype(jnp.int32),
+                                   cfg.rope_theta, cfg.mrope_sections)
+            else:
+                q, k, v = attn_qkv(p["attn"], spec, h, rope_pos, cfg.rope_theta)
+            slot = (pos % S).astype(jnp.int32)
+            ck = jax.lax.dynamic_update_slice_in_dim(c["k"], k, slot, 1)
+            cv = jax.lax.dynamic_update_slice_in_dim(c["v"], v, slot, 1)
+            cpos = jax.lax.dynamic_update_slice_in_dim(
+                c["pos"], pos[None].astype(jnp.int32), slot, 0)
+            o = decode_attention(spec, q, ck, cv,
+                                 jnp.broadcast_to(pos, (x.shape[0],)), cpos)
+            o = attn_out(p["attn"], spec, o)
+            if cfg.post_norm:
+                o = rmsnorm(p["ln1_post"], o)
+            x = x + o
+            h2 = rmsnorm(p["ln2"], x)
+            if ltype == "moe":
+                y, _ = moe_apply(p["moe"], MoeSpec(cfg.n_experts, cfg.top_k,
+                                                   cfg.d_model, cfg.d_ff,
+                                                   cfg.capacity_factor), h2)
+            else:
+                y = mlp(p["mlp"], h2, cfg.act)
+            if cfg.post_norm:
+                y = rmsnorm(p["ln2_post"], y)
+            return x + y, {"k": ck, "v": cv, "pos": cpos}
+        if ltype == "rg":
+            h = rmsnorm(p["ln1"], x)
+            y, st = rec.rglru_step(p["rg"], self.rg_spec, h, c)
+            x = x + y
+            h2 = rmsnorm(p["ln2"], x)
+            return x + mlp(p["mlp"], h2, cfg.act), st
+        if ltype == "mlstm":
+            h = rmsnorm(p["ln1"], x)
+            y, st = rec.mlstm_step(p["mlstm"], self.mlstm_spec, h, c)
+            return x + y, st
+        if ltype == "slstm":
+            h = rmsnorm(p["ln1"], x)
+            y, st = rec.slstm_scan(p["slstm"], self.slstm_spec, h,
+                                   (c["h"], c["c"], c["n"], c["m"]))
+            return x + y, {"h": st[0], "c": st[1], "n": st[2], "m": st[3]}
+        raise ValueError(ltype)
+
+    def decode_step(self, params: dict, cache: dict, tokens: Array, pos: Array):
+        """One greedy-decode step. tokens: (b,) int32; pos: () int32.
+
+        Returns (logits (b, V), cache').
+        """
+        cfg = self.cfg
+        x = params["embed"].astype(DEFAULT_COMPUTE)[tokens][:, None, :]
+        if cfg.embed_scale:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+
+        def group_step(x, pc):
+            pg, cg = pc
+            new_cg = {}
+            for i, lt in enumerate(cfg.pattern):
+                key = f"{i}:{lt}"
+                x, new_cg[key] = self._decode_block(lt, pg[key], cg[key], x, pos)
+            return x, new_cg
+
+        x, new_groups = jax.lax.scan(group_step, x,
+                                     (params["groups"], cache["groups"]))
+        new_cache = {"groups": new_groups}
+        if cfg.tail:
+            new_cache["tail"] = {}
+            for i, lt in enumerate(cfg.tail):
+                key = f"{i}:{lt}"
+                x, new_cache["tail"][key] = self._decode_block(
+                    lt, params["tail"][key], cache["tail"][key], x, pos)
+        x = rmsnorm(params["final_norm"], x)
+        head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+        logits = softcap(x[:, 0, :] @ head.astype(x.dtype), cfg.final_softcap)
+        return logits, new_cache

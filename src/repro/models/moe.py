@@ -1,0 +1,189 @@
+"""Mixture-of-Experts block (Mixtral family): top-k routing with sort-based
+dispatch at a static capacity factor.
+
+Dispatch avoids the quadratic one-hot matmul: (token, expert) assignments are
+argsorted by expert, each expert takes its first ``capacity`` tokens (overflow
+drops, standard for capacity-factor MoE), experts run as one batched einsum
+``(E, C, d) x (E, d, f)``, and results scatter back weighted by router probs.
+All shapes static; FLOPs equal the *active* 6·N_active·D accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .layers import DEFAULT_COMPUTE, dense_init
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeSpec:
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int
+    capacity_factor: float = 1.25
+
+
+def moe_init(key, spec: MoeSpec) -> dict:
+    ks = jax.random.split(key, 4)
+    e, d, f = spec.n_experts, spec.d_model, spec.d_ff
+    return {
+        "router": dense_init(ks[0], d, e),
+        "w_gate": jax.random.normal(ks[1], (e, d, f), jnp.float32) * (d ** -0.5),
+        "w_up": jax.random.normal(ks[2], (e, d, f), jnp.float32) * (d ** -0.5),
+        "w_down": jax.random.normal(ks[3], (e, f, d), jnp.float32) * (f ** -0.5),
+    }
+
+
+def capacity(spec: MoeSpec, n_tokens: int) -> int:
+    c = int(spec.capacity_factor * spec.top_k * n_tokens / spec.n_experts)
+    return max(8, (c + 7) // 8 * 8)
+
+
+def moe_apply(params: dict, spec: MoeSpec, x: Array,
+              compute=DEFAULT_COMPUTE, dispatch_groups: int = 1,
+              group_sharding=None) -> tuple[Array, Array]:
+    """x: (b, s, d) -> (y, aux_loss). Sort-based top-k dispatch.
+
+    ``dispatch_groups`` > 1 dispatches independently within token groups
+    (one per data shard on a mesh): the argsort/gather/scatter become
+    group-batched ops whose leading dim is pinned to the data axis with
+    explicit sharding constraints — without this GSPMD replicates the 40GB+
+    dispatch tensors (EXPERIMENTS.md §Perf, mixtral iterations 1-2).
+    """
+    if dispatch_groups > 1:
+        return moe_apply_grouped(params, spec, x, dispatch_groups,
+                                 compute, group_sharding)
+    b, s, d = x.shape
+    n = b * s
+    xt = x.reshape(n, d)
+    cap = capacity(spec, n)
+
+    logits = (xt @ params["router"].astype(compute)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (n, E)
+    top_p, top_e = jax.lax.top_k(probs, spec.top_k)  # (n, k)
+    top_p = top_p / top_p.sum(-1, keepdims=True)  # renormalize over chosen
+
+    # load-balancing aux loss (Switch-style)
+    me = probs.mean(0)
+    ce = jnp.zeros((spec.n_experts,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (n * spec.top_k)
+    aux = spec.n_experts * jnp.sum(me * ce)
+
+    # ---- sort assignments by expert
+    flat_e = top_e.reshape(-1)  # (n*k,)
+    flat_p = top_p.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(n), spec.top_k)
+    order = jnp.argsort(flat_e, stable=True)
+    se, sp, stok = flat_e[order], flat_p[order], flat_tok[order]
+    # rank within expert
+    start = jnp.searchsorted(se, jnp.arange(spec.n_experts))
+    rank = jnp.arange(n * spec.top_k) - start[se]
+    keep = rank < cap
+
+    # ---- gather tokens into (E, C, d)
+    slot_e = jnp.where(keep, se, 0)
+    slot_c = jnp.where(keep, rank, 0)
+    tok_idx = jnp.zeros((spec.n_experts, cap), jnp.int32).at[slot_e, slot_c].set(
+        jnp.where(keep, stok, 0).astype(jnp.int32), mode="drop")
+    gate_w = jnp.zeros((spec.n_experts, cap), jnp.float32).at[slot_e, slot_c].set(
+        jnp.where(keep, sp, 0.0), mode="drop")
+    xe = xt[tok_idx.reshape(-1)].reshape(spec.n_experts, cap, d)  # (E, C, d)
+
+    # ---- batched expert FFN
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, params["w_gate"].astype(compute)))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, params["w_up"].astype(compute))
+    ye = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(compute))  # (E, C, d)
+
+    # ---- weighted scatter back
+    ye = ye * gate_w[..., None].astype(ye.dtype)
+    y = jnp.zeros((n, d), ye.dtype).at[tok_idx.reshape(-1)].add(
+        ye.reshape(-1, d), mode="drop")
+    return y.reshape(b, s, d), aux
+
+
+def moe_apply_grouped(params: dict, spec: MoeSpec, x: Array, G: int,
+                      compute=DEFAULT_COMPUTE, group_sharding=None
+                      ) -> tuple[Array, Array]:
+    """Group-local dispatch: every op carries an explicit (G, ...) leading dim
+    so the whole dispatch pipeline shards over the data axis."""
+    b, s, d = x.shape
+    n = b * s
+    assert n % G == 0
+    m = n // G
+    E, K = spec.n_experts, spec.top_k
+    cap = capacity(spec, m)
+
+    def pin(t, rank_tail):
+        if group_sharding is None:
+            return t
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        sp = P(group_sharding.spec[0], *([None] * rank_tail))
+        return jax.lax.with_sharding_constraint(
+            t, NamedSharding(group_sharding.mesh, sp))
+
+    xt = pin(x.reshape(G, m, d), 2)
+    logits = (xt @ params["router"].astype(compute)).astype(jnp.float32)  # (G,m,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)  # (G, m, K)
+    top_p = top_p / top_p.sum(-1, keepdims=True)
+
+    me = probs.mean((0, 1))
+    ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (n * K)
+    aux = E * jnp.sum(me * ce)
+
+    flat_e = top_e.reshape(G, m * K)
+    flat_p = top_p.reshape(G, m * K)
+    flat_tok = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(m), K)[None], (G, m * K))
+    order = jnp.argsort(flat_e, axis=-1, stable=True)  # per-group sort
+    se = jnp.take_along_axis(flat_e, order, axis=-1)
+    sp = jnp.take_along_axis(flat_p, order, axis=-1)
+    stok = jnp.take_along_axis(flat_tok, order, axis=-1)
+    # rank of each slot within its expert run (per group)
+    starts = jnp.sum(se[:, :, None] < jnp.arange(E)[None, None, :], axis=1)  # (G,E)
+    rank = jnp.arange(m * K)[None, :] - jnp.take_along_axis(starts, se, axis=-1)
+    keep = rank < cap
+    gi = jnp.broadcast_to(jnp.arange(G)[:, None], (G, m * K))
+    slot_e = jnp.where(keep, se, 0)
+    slot_c = jnp.where(keep, rank, 0)
+    tok_idx = jnp.zeros((G, E, cap), jnp.int32).at[gi, slot_e, slot_c].set(
+        jnp.where(keep, stok, 0).astype(jnp.int32), mode="drop")
+    gate_w = jnp.zeros((G, E, cap), jnp.float32).at[gi, slot_e, slot_c].set(
+        jnp.where(keep, sp, 0.0), mode="drop")
+
+    # gather tokens (per group) -> (G, E*cap, d)
+    xe = jnp.take_along_axis(xt, tok_idx.reshape(G, E * cap, 1), axis=1)
+    xe = pin(xe.reshape(G, E, cap, d), 3)
+
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe,
+                               params["w_gate"].astype(compute)))
+    h = h * jnp.einsum("gecd,edf->gecf", xe, params["w_up"].astype(compute))
+    ye = jnp.einsum("gecf,efd->gecd", h, params["w_down"].astype(compute))
+    ye = pin(ye * gate_w[..., None].astype(ye.dtype), 3)
+
+    y = jnp.zeros((G, m, d), ye.dtype).at[
+        gi[:, :1].repeat(E * cap, 1), tok_idx.reshape(G, E * cap)].add(
+        ye.reshape(G, E * cap, d), mode="drop")
+    y = pin(y, 2)
+    return y.reshape(b, s, d), aux
+
+
+def moe_reference(params: dict, spec: MoeSpec, x: Array) -> Array:
+    """Dense oracle: run every expert on every token, combine by router probs
+    (no capacity drops).  Used by tests to bound dispatch error."""
+    b, s, d = x.shape
+    xt = x.reshape(-1, d).astype(jnp.float32)
+    logits = xt @ params["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, spec.top_k)
+    top_p = top_p / top_p.sum(-1, keepdims=True)
+    h = jax.nn.silu(jnp.einsum("nd,edf->enf", xt, params["w_gate"].astype(jnp.float32)))
+    h = h * jnp.einsum("nd,edf->enf", xt, params["w_up"].astype(jnp.float32))
+    ye = jnp.einsum("enf,efd->end", h, params["w_down"].astype(jnp.float32))
+    w = jnp.zeros_like(probs).at[jnp.arange(xt.shape[0])[:, None], top_e].set(top_p)
+    y = jnp.einsum("end,ne->nd", ye, w)
+    return y.reshape(b, s, d)

@@ -1,0 +1,343 @@
+"""Recurrent blocks: RG-LRU (RecurrentGemma/Griffin) and xLSTM (mLSTM/sLSTM).
+
+Training-time sequence mixing:
+  * RG-LRU — gated linear recurrence h_t = a_t ⊙ h_{t-1} + b_t, parallelized
+    with ``jax.lax.associative_scan`` (log-depth; the Pallas kernel in
+    ``repro.kernels.rglru_scan`` implements the same scan with VMEM tiles).
+  * mLSTM — matrix memory C_t = f_t C_{t-1} + i_t k_t v_tᵀ, evaluated in the
+    chunkwise-parallel form (intra-chunk attention-like + inter-chunk scan of
+    (C, n, m) state) with exponential-gating stabilization.
+  * sLSTM — scalar memory with block-diagonal recurrent weights; inherently
+    sequential => ``lax.scan`` over time (1 of 8 xLSTM blocks).
+
+Decode carries the recurrent state explicitly (O(1) per token — the reason
+these archs run the ``long_500k`` shape).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import DEFAULT_COMPUTE, dense_init, rmsnorm, rmsnorm_init
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin recurrent block)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RglruSpec:
+    d_model: int
+    d_rnn: int  # lru width (RecurrentGemma: ~d_model)
+    conv_width: int = 4
+    c: float = 8.0  # gate sharpness constant from the paper
+
+
+def rglru_init(key, spec: RglruSpec) -> dict:
+    ks = jax.random.split(key, 7)
+    d, w = spec.d_model, spec.d_rnn
+    # a parameterized via Λ in (0.9, 0.999): a = exp(-c * softplus(λ))
+    lam = jax.random.uniform(ks[0], (w,), jnp.float32, 0.2, 0.9)
+    return {
+        "w_x": dense_init(ks[1], d, w),
+        "w_y": dense_init(ks[2], d, w),  # gate branch
+        "conv": jax.random.normal(ks[3], (spec.conv_width, w), jnp.float32) * 0.1,
+        "w_a": dense_init(ks[4], w, w),  # recurrence gate proj
+        "w_i": dense_init(ks[5], w, w),  # input gate proj
+        "lam": lam,
+        "w_out": dense_init(ks[6], w, d),
+    }
+
+
+def _rglru_gates(params, x: Array, spec: RglruSpec):
+    """Per-step decay a_t (0..1) and gated input; x: (b, s, w)."""
+    r = jax.nn.sigmoid((x @ params["w_a"].astype(x.dtype)).astype(jnp.float32))
+    i = jax.nn.sigmoid((x @ params["w_i"].astype(x.dtype)).astype(jnp.float32))
+    log_a = -spec.c * r * jax.nn.softplus(params["lam"])  # (b, s, w)
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    b = mult * i * x.astype(jnp.float32)
+    return a, b
+
+
+def _causal_conv(params, x: Array, width: int) -> Array:
+    """Depthwise causal conv over time. x: (b, s, w)."""
+    pads = [(0, 0), (width - 1, 0), (0, 0)]
+    xp = jnp.pad(x, pads)
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for t in range(width):
+        out = out + xp[:, t: t + x.shape[1], :].astype(jnp.float32) * params["conv"][t]
+    return out.astype(x.dtype)
+
+
+def rglru_seq(params: dict, spec: RglruSpec, x: Array, scan_impl=None,
+              compute=DEFAULT_COMPUTE) -> Array:
+    """Full-sequence RG-LRU block. x: (b, s, d_model) -> (b, s, d_model)."""
+    gate = jax.nn.gelu((x @ params["w_y"].astype(compute)).astype(jnp.float32),
+                       approximate=True)
+    h = x @ params["w_x"].astype(compute)
+    h = _causal_conv(params, h, spec.conv_width)
+    a, b = _rglru_gates(params, h, spec)
+    if scan_impl is None:
+        def combine(u, v):
+            a1, b1 = u
+            a2, b2 = v
+            return a1 * a2, a2 * b1 + b2
+        _, hs = jax.lax.associative_scan(combine, (a, b), axis=1)
+    else:
+        hs = scan_impl(a, b)  # Pallas path
+    y = hs * gate
+    return (y.astype(compute) @ params["w_out"].astype(compute))
+
+
+def rglru_step(params: dict, spec: RglruSpec, x: Array, state: dict,
+               compute=DEFAULT_COMPUTE):
+    """Single decode step. x: (b, 1, d); state: {'h': (b,w), 'conv': (b,cw-1,w)}."""
+    gate = jax.nn.gelu((x @ params["w_y"].astype(compute)).astype(jnp.float32),
+                       approximate=True)
+    u = x @ params["w_x"].astype(compute)  # (b, 1, w)
+    window = jnp.concatenate([state["conv"], u.astype(jnp.float32)], axis=1)  # (b,cw,w)
+    conv = jnp.einsum("btw,tw->bw", window, params["conv"])[:, None, :].astype(compute)
+    a, b = _rglru_gates(params, conv, spec)
+    h = a[:, 0] * state["h"] + b[:, 0]  # (b, w)
+    y = h[:, None, :] * gate
+    out = y.astype(compute) @ params["w_out"].astype(compute)
+    new_state = {"h": h, "conv": window[:, 1:, :]}
+    return out, new_state
+
+
+def rglru_state_init(batch: int, spec: RglruSpec) -> dict:
+    return {"h": jnp.zeros((batch, spec.d_rnn), jnp.float32),
+            "conv": jnp.zeros((batch, spec.conv_width - 1, spec.d_rnn), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix memory, chunkwise-parallel)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MlstmSpec:
+    d_model: int
+    n_heads: int
+    proj_factor: float = 2.0
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.d_model * self.proj_factor)
+
+    @property
+    def d_head(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+def mlstm_init(key, spec: MlstmSpec) -> dict:
+    ks = jax.random.split(key, 8)
+    d, di = spec.d_model, spec.d_inner
+    return {
+        "w_up": dense_init(ks[0], d, di),
+        "w_gate": dense_init(ks[1], d, di),
+        "w_q": dense_init(ks[2], di, di),
+        "w_k": dense_init(ks[3], di, di),
+        "w_v": dense_init(ks[4], di, di),
+        "w_i": dense_init(ks[5], di, spec.n_heads),  # input gate (exp)
+        "w_f": dense_init(ks[6], di, spec.n_heads),  # forget gate
+        "norm": rmsnorm_init(di),
+        "w_down": dense_init(ks[7], di, d),
+    }
+
+
+def _mlstm_qkvgates(params, xi: Array, spec: MlstmSpec):
+    b, s, _ = xi.shape
+    h, dh = spec.n_heads, spec.d_head
+    q = (xi @ params["w_q"].astype(xi.dtype)).reshape(b, s, h, dh)
+    k = (xi @ params["w_k"].astype(xi.dtype)).reshape(b, s, h, dh) / math.sqrt(dh)
+    v = (xi @ params["w_v"].astype(xi.dtype)).reshape(b, s, h, dh)
+    igate = (xi @ params["w_i"].astype(xi.dtype)).astype(jnp.float32)  # (b,s,h)
+    fgate = (xi @ params["w_f"].astype(xi.dtype)).astype(jnp.float32)
+    logf = -jax.nn.softplus(-fgate)  # log sigmoid(f)
+    return q, k, v, igate, logf
+
+
+def mlstm_seq(params: dict, spec: MlstmSpec, x: Array, compute=DEFAULT_COMPUTE) -> Array:
+    """Chunkwise-parallel mLSTM with exponential-gate stabilization."""
+    b, s, _ = x.shape
+    hN, dh, C = spec.n_heads, spec.d_head, min(spec.chunk, s)
+    if s % C:
+        C = s
+    nch = s // C
+    xi = x @ params["w_up"].astype(compute)
+    gate = jax.nn.silu((x @ params["w_gate"].astype(compute)).astype(jnp.float32))
+    q, k, v, ig, logf = _mlstm_qkvgates(params, xi, spec)
+
+    # reshape into chunks: (b, nch, C, ...)
+    rs = lambda t: t.reshape((b, nch, C) + t.shape[2:])
+    qc, kc, vc = rs(q), rs(k), rs(v)
+    igc, logfc = rs(ig), rs(logf)
+
+    # intra-chunk cumulative log-forgets
+    cum_f = jnp.cumsum(logfc, axis=2)  # (b, nch, C, h): sum of logf up to & incl t
+
+    def chunk_step(carry, inp):
+        Cm, n, m = carry  # (b,h,dh,dh), (b,h,dh), (b,h)
+        qt, kt, vt, igt, cft, lft = inp  # per-chunk slices, time-major leading dims ok
+        # log decay from chunk start to position t (inclusive)
+        # state contribution: decay from previous state to t: cft
+        # gate matrix D[t,u] = cum_f[t] - cum_f[u] + ig[u]  for u <= t
+        lf_total = cft[:, -1]  # (b, h)
+        du = cft[:, :, None, :] - cft[:, None, :, :] + igt[:, None, :, :]  # (b,t,u,h)
+        tri = jnp.tril(jnp.ones((qt.shape[1], qt.shape[1]), bool))
+        du = jnp.where(tri[None, :, :, None], du, -jnp.inf)
+        # stabilizer per (b, t, h)
+        m_intra = du.max(axis=2)
+        m_state = cft + m[:, None, :]  # contribution of carried state
+        m_new = jnp.maximum(m_intra, m_state)  # (b, t, h)
+        # intra-chunk "attention" — bf16 operands post-stabilization
+        # (values <= 1 after the exp-max shift), f32 accumulation on the MXU
+        sc = jnp.einsum("bthd,buhd->btuh", qt, kt,
+                        preferred_element_type=jnp.float32)
+        w = (sc * jnp.exp(du - m_new[:, :, None, :])).astype(qt.dtype)
+        intra = jnp.einsum("btuh,buhd->bthd", w, vt,
+                           preferred_element_type=jnp.float32)
+        norm_intra = jnp.einsum("btuh,buh->bth", w,
+                                jnp.ones(kt.shape[:-1], w.dtype),
+                                preferred_element_type=jnp.float32)
+        # inter-chunk from carried state
+        decay = jnp.exp(cft + m[:, None, :] - m_new)  # (b, t, h)
+        inter = jnp.einsum("bthd,bhde->bthe", qt.astype(jnp.float32), Cm) * decay[..., None]
+        norm_inter = jnp.einsum("bthd,bhd->bth", qt.astype(jnp.float32), n) * decay
+        num = intra + inter
+        den = jnp.abs(norm_intra + norm_inter)
+        hout = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        # ---- update state to end of chunk
+        m_next = jnp.maximum(lf_total + m, (cft[:, -1:, :] - cft + igt).max(axis=1))
+        k_dec = jnp.exp(cft[:, -1:, :] - cft + igt - m_next[:, None, :])  # (b,u,h)
+        C_upd = jnp.einsum("buh,buhd,buhe->bhde", k_dec, kt.astype(jnp.float32),
+                           vt.astype(jnp.float32))
+        n_upd = jnp.einsum("buh,buhd->bhd", k_dec, kt.astype(jnp.float32))
+        sdecay = jnp.exp(lf_total + m - m_next)
+        C_new = Cm * sdecay[..., None, None] + C_upd
+        n_new = n * sdecay[..., None] + n_upd
+        return (C_new, n_new, m_next), hout
+
+    C0 = jnp.zeros((b, hN, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, hN, dh), jnp.float32)
+    m0 = jnp.full((b, hN), -jnp.inf, jnp.float32)
+    xs = (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+          jnp.moveaxis(igc, 1, 0), jnp.moveaxis(cum_f, 1, 0), jnp.moveaxis(logfc, 1, 0))
+    # remat: recompute the O(C²) intra-chunk tensors in backward instead of
+    # saving them — only the (C, n, m) carries persist per chunk
+    _, hs = jax.lax.scan(jax.checkpoint(chunk_step), (C0, n0, m0), xs)
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, s, hN * dh)  # (b, s, d_inner)
+    y = rmsnorm(params["norm"], hs.astype(compute)) * gate.astype(compute)
+    return y @ params["w_down"].astype(compute)
+
+
+def mlstm_step(params: dict, spec: MlstmSpec, x: Array, state: dict,
+               compute=DEFAULT_COMPUTE):
+    """Decode step; state: C (b,h,dh,dh), n (b,h,dh), m (b,h)."""
+    b = x.shape[0]
+    hN, dh = spec.n_heads, spec.d_head
+    xi = x @ params["w_up"].astype(compute)
+    gate = jax.nn.silu((x @ params["w_gate"].astype(compute)).astype(jnp.float32))
+    q, k, v, ig, logf = _mlstm_qkvgates(params, xi, spec)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]  # (b,h,dh)
+    ig, logf = ig[:, 0], logf[:, 0]  # (b,h)
+    m_new = jnp.maximum(logf + state["m"], ig)
+    fdec = jnp.exp(logf + state["m"] - m_new)
+    idec = jnp.exp(ig - m_new)
+    C = state["C"] * fdec[..., None, None] + idec[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k.astype(jnp.float32), v.astype(jnp.float32))
+    n = state["n"] * fdec[..., None] + idec[..., None] * k.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", q.astype(jnp.float32), C)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32), n))
+    h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    hs = h.reshape(b, 1, hN * dh)
+    y = rmsnorm(params["norm"], hs.astype(compute)) * gate.astype(compute)
+    out = y @ params["w_down"].astype(compute)
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+def mlstm_state_init(batch: int, spec: MlstmSpec) -> dict:
+    return {"C": jnp.zeros((batch, spec.n_heads, spec.d_head, spec.d_head), jnp.float32),
+            "n": jnp.zeros((batch, spec.n_heads, spec.d_head), jnp.float32),
+            "m": jnp.full((batch, spec.n_heads), -jnp.inf, jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, sequential scan)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SlstmSpec:
+    d_model: int
+    n_heads: int = 4
+
+
+def slstm_init(key, spec: SlstmSpec) -> dict:
+    ks = jax.random.split(key, 6)
+    d = spec.d_model
+    hd = d // spec.n_heads
+    return {
+        "w_z": dense_init(ks[0], d, d),
+        "w_i": dense_init(ks[1], d, d),
+        "w_f": dense_init(ks[2], d, d),
+        "w_o": dense_init(ks[3], d, d),
+        # block-diagonal recurrent weights: (heads, hd, hd)
+        "r_z": jax.random.normal(ks[4], (spec.n_heads, hd, hd), jnp.float32) / math.sqrt(hd),
+        "r_i": jnp.zeros((spec.n_heads, hd, hd), jnp.float32),
+        "norm": rmsnorm_init(d),
+        "w_down": dense_init(ks[5], d, d),
+    }
+
+
+def slstm_scan(params: dict, spec: SlstmSpec, x: Array, state=None,
+               compute=DEFAULT_COMPUTE):
+    """x: (b, s, d). Sequential lax.scan (sLSTM is not parallelizable)."""
+    b, s, d = x.shape
+    hN = spec.n_heads
+    hd = d // hN
+    zx = (x @ params["w_z"].astype(compute)).astype(jnp.float32)
+    ix = (x @ params["w_i"].astype(compute)).astype(jnp.float32)
+    fx = (x @ params["w_f"].astype(compute)).astype(jnp.float32)
+    ox = (x @ params["w_o"].astype(compute)).astype(jnp.float32)
+
+    def step(carry, inp):
+        h, c, n, m = carry  # (b, d), (b, d), (b, d), (b, d)
+        zt, it, ft, ot = inp
+        hh = h.reshape(b, hN, hd)
+        rz = jnp.einsum("bhd,hde->bhe", hh, params["r_z"]).reshape(b, d)
+        ri = jnp.einsum("bhd,hde->bhe", hh, params["r_i"]).reshape(b, d)
+        z = jnp.tanh(zt + rz)
+        ilog = it + ri
+        flog = -jax.nn.softplus(-(ft))  # log sigmoid
+        m_new = jnp.maximum(flog + m, ilog)
+        i = jnp.exp(ilog - m_new)
+        f = jnp.exp(flog + m - m_new)
+        c_new = f * c + i * z
+        n_new = f * n + i
+        h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    if state is None:
+        state = slstm_state_init(b, spec)
+    xs = (jnp.moveaxis(zx, 1, 0), jnp.moveaxis(ix, 1, 0),
+          jnp.moveaxis(fx, 1, 0), jnp.moveaxis(ox, 1, 0))
+    state, hs = jax.lax.scan(step, state, xs)
+    hs = jnp.moveaxis(hs, 0, 1).astype(compute)  # (b, s, d)
+    y = rmsnorm(params["norm"], hs)
+    return y @ params["w_down"].astype(compute), state
+
+
+def slstm_state_init(batch: int, spec: SlstmSpec):
+    d = spec.d_model
+    return (jnp.zeros((batch, d), jnp.float32), jnp.zeros((batch, d), jnp.float32),
+            jnp.zeros((batch, d), jnp.float32), jnp.full((batch, d), -jnp.inf, jnp.float32))

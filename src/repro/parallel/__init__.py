@@ -1,0 +1,5 @@
+from .sharding import (activation_spec, batch_shardings, cache_shardings,
+                       param_shardings, spec_tree)
+
+__all__ = ["param_shardings", "batch_shardings", "cache_shardings",
+           "activation_spec", "spec_tree"]

@@ -1,0 +1,68 @@
+import os
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""GPS-style automatic sharding selection (the paper's §6.3/§7.3, LM-side).
+
+BigDatalog picks a partitioning by (i) checking for a generalized pivot set
+(=> zero-communication plan) and (ii) otherwise scoring candidate
+discriminating sets with the RWA cost model.  The transformer analogue: score
+candidate activation/weight sharding modes by the collective operand bytes of
+the *lowered* program — communication is the pod's only contention, so the
+cost model is read straight off the compiled HLO instead of a lock table.
+
+    python -m repro.parallel.autoshard --arch mixtral-8x7b --shape train_4k
+
+Lowers each candidate on the production mesh, walks the HLO, and reports the
+ranking (the §Perf A3 sequence-parallel finding came from this tool).
+"""
+import argparse
+import json
+
+
+def search_activation_sharding(arch: str, shape: str, modes=("d", "seq", "none"),
+                               multi_pod: bool = False,
+                               hbm_limit: float = 16e9) -> list[dict]:
+    from repro.launch.dryrun import CellOptions, build_cell
+    from repro.roofline.walker import walk_costs
+
+    results = []
+    for mode in modes:
+        try:
+            lowered, n_chips, mflops, meta = build_cell(
+                arch, shape, multi_pod, CellOptions(act_mode=mode))
+            compiled = lowered.compile()
+            w = walk_costs(compiled.as_text())
+            ma = compiled.memory_analysis()
+            peak = (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                    + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+            results.append({
+                "mode": mode, "coll_bytes": w.coll_bytes, "bytes": w.bytes,
+                "flops": w.flops, "peak_bytes": peak,
+                "feasible": peak <= hbm_limit,
+            })
+        except Exception as e:  # noqa: BLE001 — a candidate may fail to lower
+            results.append({"mode": mode, "error": f"{type(e).__name__}: {e}"})
+    # RWA-style ranking: feasible first, then minimum communication
+    results.sort(key=lambda r: (not r.get("feasible", False),
+                                r.get("coll_bytes", float("inf"))))
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    ranking = search_activation_sharding(args.arch, args.shape,
+                                         multi_pod=args.multi_pod)
+    print(json.dumps(ranking, indent=1))
+    best = ranking[0]
+    print(f"\nbest: --act-mode {best['mode']} "
+          f"(collective bytes {best.get('coll_bytes', 0)/1e9:.1f} GB/device, "
+          f"peak {best.get('peak_bytes', 0)/1e9:.1f} GB)")
+
+
+if __name__ == "__main__":
+    main()

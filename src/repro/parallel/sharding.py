@@ -1,0 +1,201 @@
+"""Sharding rules: logical roles -> PartitionSpecs, divisibility-guarded.
+
+The strategy (DESIGN.md §5/§6) is FSDP+TP hybrid:
+
+* weight matrices: contracting/input dim over ``data`` (FSDP — gathered per
+  layer inside the scan), output/feature dim over ``model`` (TP);
+* "row-parallel" weights (wo, w_down) transpose that assignment so the TP
+  collective after attention/FFN is a single reduce-scatter;
+* embeddings/lm_head: vocab over ``model`` (TP logits), d_model over ``data``;
+* batch over (``pod``, ``data``) — the pod axis composes with data so the
+  same rules serve 1..N pods;
+* decode KV caches: batch over dp when divisible, cache length over ``model``
+  (flash-decoding style) so 32k/500k caches fit;
+* everything guarded by divisibility — a dim that doesn't divide the mesh
+  axis stays unsharded rather than failing (heads are pre-padded in the model
+  so the guard rarely bites where it matters).
+
+This module is also where the paper's planning insight lands for the LM side:
+``repro.parallel.autoshard`` scores candidate spec assignments by collective
+bytes from lowered HLO (the RWA cost model with communication in place of
+locks) — used by the §Perf hillclimb.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# weights whose *second-to-last* dim is the TP dim (row-parallel)
+_ROW_TP = {"wo", "w_down", "w_out"}
+# replicated small params
+_REPLICATED = {"scale", "lam", "r_z", "r_i"}
+
+
+def _axsz(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    return axes is not None and dim % _axsz(mesh, axes) == 0
+
+
+def _guard(dim: int, mesh: Mesh, axes):
+    return axes if _fits(dim, mesh, axes) else None
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def tp_axis(mesh: Mesh) -> str:
+    return "model"
+
+
+def fsdp_axis(mesh: Mesh) -> str:
+    return "data"
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+
+def _param_spec(path: tuple, leaf, mesh: Mesh) -> P:
+    name = None
+    for k in reversed(path):
+        if isinstance(k, jax.tree_util.DictKey):
+            name = k.key
+            break
+    shape = leaf.shape
+    nd = len(shape)
+    fa, ta = fsdp_axis(mesh), tp_axis(mesh)
+
+    if name in _REPLICATED or nd <= 1:
+        return P(*([None] * nd))
+    if name == "embed":  # (V, d)
+        return P(_guard(shape[0], mesh, ta), _guard(shape[1], mesh, fa))
+    if name == "lm_head":  # (d, V)
+        return P(_guard(shape[0], mesh, fa), _guard(shape[1], mesh, ta))
+    if name == "conv":  # (…, width, w)
+        return P(*([None] * (nd - 1)), _guard(shape[-1], mesh, ta))
+    # generic matmul weight (…, d_in, d_out), incl. stacked (G[,k][,E], …)
+    lead = [None] * (nd - 2)
+    if name in _ROW_TP:
+        return P(*lead, _guard(shape[-2], mesh, ta), _guard(shape[-1], mesh, fa))
+    return P(*lead, _guard(shape[-2], mesh, fa), _guard(shape[-1], mesh, ta))
+
+
+def spec_tree(tree, mesh: Mesh, fn) -> Any:
+    return jax.tree_util.tree_map_with_path(lambda p, l: fn(p, l, mesh), tree)
+
+
+def param_shardings(param_shapes, mesh: Mesh):
+    """PartitionSpec pytree (and NamedShardings) for a params shape-pytree."""
+    specs = spec_tree(param_shapes, mesh, _param_spec)
+    return specs
+
+
+def opt_shardings(opt_shapes, mesh: Mesh):
+    """m/v mirror params; step is replicated."""
+    return {
+        "m": spec_tree(opt_shapes["m"], mesh, _param_spec),
+        "v": spec_tree(opt_shapes["v"], mesh, _param_spec),
+        "step": P(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# batch / activation specs
+# ---------------------------------------------------------------------------
+
+
+def batch_shardings(batch_shapes, mesh: Mesh):
+    dp = dp_axes(mesh)
+
+    def one(path, leaf, mesh):
+        shape = leaf.shape
+        b = shape[0]
+        lead = dp if _fits(b, mesh, dp) else (
+            "data" if _fits(b, mesh, ("data",)) else None)
+        return P(lead, *([None] * (len(shape) - 1)))
+
+    return spec_tree(batch_shapes, mesh, one)
+
+
+def activation_spec(mesh: Mesh, batch: int, d_model: int,
+                    mode: str = "d") -> P:
+    """Between-block constraint for (b, s, d) activations.
+
+    mode 'd'   — hidden dim over model (baseline);
+    mode 'seq' — sequence dim over model (sequence parallelism: the TP
+                 boundary collective becomes an all-gather/reduce-scatter of
+                 bf16 activations instead of a full fp32 all-reduce);
+    mode 'none'— replicated (for ablation).
+    """
+    dp = dp_axes(mesh)
+    b_ax = dp if batch % _axsz(mesh, dp) == 0 else (
+        "data" if batch % mesh.shape["data"] == 0 else None)
+    if mode == "seq":
+        return P(b_ax, tp_axis(mesh), None)
+    if mode == "none":
+        return P(b_ax, None, None)
+    d_ax = _guard(d_model, mesh, tp_axis(mesh))
+    return P(b_ax, None, d_ax)
+
+
+# ---------------------------------------------------------------------------
+# decode-cache specs
+# ---------------------------------------------------------------------------
+
+
+def _cache_spec(path: tuple, leaf, mesh: Mesh) -> P:
+    name = None
+    for k in reversed(path):
+        if isinstance(k, jax.tree_util.DictKey):
+            name = k.key
+            break
+    shape = leaf.shape
+    nd = len(shape)
+    dp = dp_axes(mesh)
+    ta = tp_axis(mesh)
+
+    if name in ("k", "v"):  # (G, b, S, kv, hd)
+        lead = [None] * (nd - 4)
+        b, S = shape[-4], shape[-3]
+        b_ax = dp if _fits(b, mesh, dp) else ("data" if _fits(b, mesh, ("data",)) else None)
+        return P(*lead, b_ax, _guard(S, mesh, ta), None, None)
+    if name == "pos":
+        return P(*([None] * nd))
+    if name == "C":  # mlstm matrix state (G, b, h, dk, dv)
+        lead = [None] * (nd - 4)
+        b = shape[-4]
+        b_ax = dp if _fits(b, mesh, dp) else None
+        # dk takes the data axis only when batch doesn't (e.g. long_500k b=1)
+        dk_ax = _guard(shape[-2], mesh, "data") if b_ax is None else None
+        return P(*lead, b_ax, None, dk_ax, _guard(shape[-1], mesh, ta))
+    # generic recurrent state (…, b, feature) or (…, b, t, feature)
+    if nd >= 2:
+        lead = [None] * (nd - 2)
+        b = shape[0] if nd == 2 else shape[-2]
+        # batch is usually a leading (G,) stacked dim away; just shard last dim
+        return P(*([None] * (nd - 1)), _guard(shape[-1], mesh, ta))
+    return P(*([None] * nd))
+
+
+def cache_shardings(cache_shapes, mesh: Mesh):
+    return spec_tree(cache_shapes, mesh, _cache_spec)
+
+
+def to_named(tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,5 @@
+from .hlo import collective_bytes, parse_collectives
+from .report import HW, RooflineTerms, model_flops, roofline
+
+__all__ = ["collective_bytes", "parse_collectives", "roofline",
+           "RooflineTerms", "HW", "model_flops"]

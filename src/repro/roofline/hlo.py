@@ -1,0 +1,102 @@
+"""HLO-text analysis: collective operand bytes.
+
+``compiled.cost_analysis()`` has FLOPs and memory traffic but not collective
+volume, so we parse the post-optimization HLO: for every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute instruction, sum
+its *operand* sizes.  Operand shapes are resolved through an instruction-name
+-> result-shape map built from the whole module (operands print as bare
+``%name`` references in XLA's as_text output).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+# "%name = f32[1,2,3]{...} op(...)" or tuple results "(f32[..], f32[..])"
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<type>\([^=]*?\)|[\w\[\],\s{}:#*]+?)\s+"
+    r"(?P<op>[\w\-]+)\((?P<operands>.*?)\)", re.S)
+_SHAPE_RE = re.compile(r"(?P<dt>\w+)\[(?P<dims>[\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    op_bytes: dict  # op kind -> summed operand bytes
+    op_counts: dict  # op kind -> instruction count
+    total_bytes: int
+
+    def by_kind(self) -> dict:
+        return dict(self.op_bytes)
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    # first pass: result type per instruction name
+    result_type: dict[str, str] = {}
+    lines = hlo_text.splitlines()
+    for ln in lines:
+        if "=" not in ln:
+            continue
+        m = _DEF_RE.match(ln)
+        if m:
+            result_type[m.group("name")] = m.group("type")
+
+    op_bytes: dict[str, int] = defaultdict(int)
+    op_counts: dict[str, int] = defaultdict(int)
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        op = m.group("op")
+        kind = next((c for c in COLLECTIVE_OPS if op == c or op.startswith(c + ".")), None)
+        if kind is None:
+            # fusion wrappers like all-gather-start
+            kind = next((c for c in COLLECTIVE_OPS if op.startswith(c)), None)
+        if kind is None:
+            continue
+        if op.endswith("-done"):
+            continue  # avoid double counting start/done pairs
+        # operand bytes: resolve %refs; fall back to inline types; else result
+        operands = m.group("operands")
+        obytes = 0
+        for ref in re.finditer(r"%?([\w.\-]+)", operands):
+            t = result_type.get(ref.group(1))
+            if t:
+                obytes += _shape_bytes(t)
+        inline = _shape_bytes(operands)
+        obytes = max(obytes, inline)
+        if obytes == 0:
+            obytes = _shape_bytes(m.group("type"))
+        op_bytes[kind] += obytes
+        op_counts[kind] += 1
+    return CollectiveStats(dict(op_bytes), dict(op_counts),
+                           sum(op_bytes.values()))
+
+
+def collective_bytes(hlo_text: str) -> int:
+    return parse_collectives(hlo_text).total_bytes

@@ -1,0 +1,296 @@
+"""Trip-count-aware HLO cost walker.
+
+``compiled.cost_analysis()`` counts every loop body ONCE (verified: a
+10-iteration scan reports the same FLOPs as its body).  Since the framework
+deliberately lowers layer stacks as ``lax.scan`` (small HLO, fast compiles),
+honest roofline terms need loop-body costs multiplied by trip counts.  This
+walker parses the post-optimization HLO text and computes:
+
+  * flops — dot ops exactly (2·K·|result|), elementwise/reduce at 1/elem,
+    transcendentals at a small fixed weight;
+  * bytes — per top-level op, operand+result sizes (fusion boundaries =
+    actual HBM traffic; fusion internals are not double counted);
+  * collective bytes — operand sizes of collective ops;
+
+each scaled by the product of enclosing while-loop trip counts (recovered
+from the loop-condition constant; dynamic-trip loops multiply by 1 and are
+flagged).  Validated against analytic 6·N·D FLOPs in the test-suite.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(?P<dt>\w+)\[(?P<dims>[\d,]*)\]")
+# permissive: parameter lists may contain nested tuple types
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?(?P<name>[\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%(?P<name>[\w.\-]+)\s*=\s*"
+    r"(?P<type>\([^()]*\)|[\w\[\],{}:#*\s]+?)\s+"  # tuple types may hold /*index=N*/ comments
+    r"(?P<op>[\w\-]+)\((?P<operands>.*?)\)(?P<attrs>.*)$")
+
+_ELEMWISE_1 = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "compare",
+    "select", "and", "or", "xor", "not", "negate", "abs", "clamp", "floor",
+    "ceil", "round-nearest-afz", "sign", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "convert", "remainder",
+}
+_TRANSCENDENTAL = {"exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+                   "cosine", "sine", "logistic", "exponential-minus-one",
+                   "log-plus-one", "atan2", "erf", "cbrt"}
+_NO_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+               "after-all", "opt-barrier",
+               # pure layout/dtype ops: XLA TPU fuses these into consumers;
+               # the CPU backend leaves them top-level, which would otherwise
+               # overstate the HBM term (documented in EXPERIMENTS.md §Roofline)
+               "copy", "transpose", "convert", "reshape", "broadcast"}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
+    elems = byts = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        dims = m.group("dims")
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type: str
+    op: str
+    operands: list[str]
+    attrs: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list[Instr]
+
+
+@dataclasses.dataclass
+class WalkCosts:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: dict = dataclasses.field(default_factory=dict)
+    dynamic_loops: int = 0
+
+    def scaled(self, k: float) -> "WalkCosts":
+        return WalkCosts(self.flops * k, self.bytes * k, self.coll_bytes * k,
+                         {kk: v * k for kk, v in self.coll_by_kind.items()},
+                         self.dynamic_loops)
+
+    def __iadd__(self, o: "WalkCosts"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.coll_bytes += o.coll_bytes
+        for k, v in o.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + v
+        self.dynamic_loops += o.dynamic_loops
+        return self
+
+
+def parse_module(hlo: str) -> tuple[dict[str, Computation], str]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR.match(line.strip())
+        if hdr and "{" in line:
+            cur = Computation(hdr.group("name"), [])
+            comps[cur.name] = cur
+            if line.strip().startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        operands = [x.group(1) for x in re.finditer(r"%([\w.\-]+)", m.group("operands"))]
+        cur.instrs.append(Instr(m.group("name"), m.group("type"), m.group("op"),
+                                operands, m.group("attrs"), line))
+    assert entry, "no ENTRY computation found"
+    return comps, entry
+
+
+def _called_comps(instr: Instr) -> list[str]:
+    out = []
+    for key in ("calls=", "to_apply=", "body=", "condition=", "branch_computations={"):
+        for m in re.finditer(re.escape(key) + r"[{]?%?([\w.\-]+)", instr.attrs):
+            out.append(m.group(1))
+    return out
+
+
+def _trip_count_from_backend_config(ins: Instr) -> int | None:
+    """XLA annotates countable loops: backend_config={"known_trip_count":{"n":"10"}}."""
+    m = re.search(r'known_trip_count\D+(\d+)', ins.attrs)
+    return int(m.group(1)) if m else None
+
+
+def _trip_count(cond: Computation) -> int | None:
+    """Fallback: largest positive constant in a scan-style loop condition."""
+    consts = []
+    for ins in cond.instrs:
+        if ins.op == "constant":
+            mm = re.search(r"constant\((-?\d+)\)", ins.line)
+            if mm:
+                consts.append(int(mm.group(1)))
+    pos = [c for c in consts if c > 0]
+    return max(pos) if pos else None
+
+
+class HloWalker:
+    def __init__(self, hlo: str):
+        self.comps, self.entry = parse_module(hlo)
+        self.shapes: dict[str, str] = {}
+        for c in self.comps.values():
+            for ins in c.instrs:
+                self.shapes[ins.name] = ins.type
+        self._memo: dict[str, WalkCosts] = {}
+
+    # -- per-instruction flops -------------------------------------------------
+
+    def _dot_flops(self, ins: Instr) -> float:
+        res_elems, _ = _shape_elems_bytes(ins.type)
+        lhs = self.shapes.get(ins.operands[0], "") if ins.operands else ""
+        mdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+        k = 1
+        if lhs and mdims and mdims.group(1):
+            sm = _SHAPE_RE.search(lhs)
+            if sm and sm.group("dims"):
+                dims = [int(d) for d in sm.group("dims").split(",")]
+                for ci in mdims.group(1).split(","):
+                    ci = int(ci)
+                    if ci < len(dims):
+                        k *= dims[ci]
+        return 2.0 * k * res_elems
+
+    def _instr_costs(self, ins: Instr, in_fusion: bool = False,
+                     in_loop: bool = False) -> WalkCosts:
+        c = WalkCosts()
+        elems, rbytes = _shape_elems_bytes(ins.type)
+        if ins.op == "dot":
+            c.flops += self._dot_flops(ins)
+        elif ins.op in _ELEMWISE_1:
+            c.flops += elems
+        elif ins.op in _TRANSCENDENTAL:
+            c.flops += 8.0 * elems
+        elif ins.op in ("reduce", "reduce-window"):
+            op_elems = sum(_shape_elems_bytes(self.shapes.get(o, ""))[0]
+                           for o in ins.operands[: max(1, len(ins.operands) // 2)])
+            c.flops += op_elems
+        elif ins.op == "sort":
+            c.flops += 5.0 * elems * max(1.0, math.log2(max(elems, 2)))
+        # HBM traffic proxy: fusion boundaries only — internals live in
+        # registers/VMEM, counting them would double-bill the traffic.
+        if not in_fusion and ins.op not in _NO_TRAFFIC:
+            if ins.op == "dynamic-update-slice" or (
+                    ins.op == "fusion" and "dynamic_update_slice" in ins.attrs):
+                # XLA aliases DUS in place: traffic = the updated slice (rw),
+                # not the full buffer (a 4096-step scan would otherwise be
+                # billed 4096 × the whole stacked output)
+                upd = min((_shape_elems_bytes(self.shapes.get(o, ""))[1]
+                           for o in ins.operands[1:2]), default=0)
+                if ins.op == "fusion":
+                    # smallest non-scalar operand approximates the update
+                    sizes = [_shape_elems_bytes(self.shapes.get(o, ""))[1]
+                             for o in ins.operands]
+                    sizes = [s for s in sizes if 0 < s < rbytes]
+                    upd = min(sizes, default=rbytes)
+                c.bytes += 2.0 * upd
+            elif ins.op == "dynamic-slice" or (
+                    ins.op == "fusion" and "dynamic_slice" in ins.attrs):
+                c.bytes += 2.0 * rbytes  # read slice + write result
+            else:
+                sizes = [_shape_elems_bytes(self.shapes.get(o, ""))[1]
+                         for o in ins.operands]
+                if in_loop and ins.op == "fusion":
+                    # loop bodies read per-iteration *slices* of stacked scan
+                    # inputs; the fusion operand list shows the whole stacked
+                    # buffer.  Cap each operand at 16x the result so a
+                    # 4096-step scan isn't billed 4096 full-buffer reads.
+                    sizes = [min(s, 16 * max(rbytes, 1)) for s in sizes]
+                c.bytes += sum(sizes) + rbytes
+        kind = next((k for k in _COLLECTIVES if ins.op.startswith(k)), None)
+        if kind and not ins.op.endswith("-done"):
+            obytes = sum(_shape_elems_bytes(self.shapes.get(o, ""))[1]
+                         for o in ins.operands)
+            if obytes == 0:
+                obytes = rbytes
+            c.coll_bytes += obytes
+            c.coll_by_kind[kind] = c.coll_by_kind.get(kind, 0.0) + obytes
+        return c
+
+    # -- computation walk --------------------------------------------------------
+
+    def comp_costs(self, name: str, in_fusion: bool = False,
+                   in_loop: bool = False) -> WalkCosts:
+        key = (name, in_fusion, in_loop)
+        if key in self._memo:
+            return self._memo[key]
+        self._memo[key] = WalkCosts()  # cycle guard
+        comp = self.comps.get(name)
+        total = WalkCosts()
+        if comp is None:
+            return total
+        for ins in comp.instrs:
+            if ins.op == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", ins.attrs)
+                cm = re.search(r"condition=%?([\w.\-]+)", ins.attrs)
+                body = bm.group(1) if bm else None
+                cond = cm.group(1) if cm else None
+                trips = _trip_count_from_backend_config(ins)
+                if trips is None and cond and cond in self.comps:
+                    trips = _trip_count(self.comps[cond])
+                if trips is None:
+                    trips = 1
+                    total.dynamic_loops += 1
+                if body:
+                    total += self.comp_costs(body, in_fusion, True).scaled(float(trips))
+                if cond:
+                    total += self.comp_costs(cond, in_fusion, True).scaled(float(trips))
+            elif ins.op in ("fusion", "call", "conditional", "custom-call",
+                            "reduce", "reduce-window", "map", "scatter", "select-and-scatter"):
+                total += self._instr_costs(ins, in_fusion, in_loop)
+                for sub in _called_comps(ins):
+                    if ins.op in ("reduce", "reduce-window", "scatter"):
+                        continue  # applied per-element; cost already approximated
+                    total += self.comp_costs(sub, in_fusion or ins.op == "fusion",
+                                             in_loop)
+            else:
+                total += self._instr_costs(ins, in_fusion, in_loop)
+        self._memo[key] = total
+        return total
+
+    def walk(self) -> WalkCosts:
+        return self.comp_costs(self.entry)
+
+
+def walk_costs(hlo: str) -> WalkCosts:
+    return HloWalker(hlo).walk()

@@ -1,0 +1,5 @@
+from .driver import (DriverConfig, SimulatedFailure, TrainDriver,
+                     run_with_restarts)
+
+__all__ = ["TrainDriver", "DriverConfig", "SimulatedFailure",
+           "run_with_restarts"]

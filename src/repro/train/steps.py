@@ -1,0 +1,78 @@
+"""jit-able train / serve steps.
+
+``make_train_step``: loss -> grad -> AdamW, with optional gradient
+accumulation (microbatching via lax.scan) and optional int8 gradient
+compression on the inter-pod hop (see ``compress.py``).
+
+``make_serve_step``: one greedy decode step (token in, token out) around
+``Model.decode_step``; ``make_prefill_step``: full-sequence forward returning
+last-position logits (the prefill shapes of the assignment lower this).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import Model
+from .optim import AdamWConfig, adamw_init, adamw_update
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    accum_steps: int = 1,
+                    grad_transform: Callable | None = None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def micro(carry, mb):
+                acc, = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (jax.tree.map(jnp.add, acc, g),), l
+
+            micro_batches = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps) + x.shape[1:]),
+                batch)
+            zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+            (gsum,), losses = jax.lax.scan(micro, (zeros,), micro_batches)
+            grads = jax.tree.map(lambda g: g / accum_steps, gsum)
+            loss = losses.mean()
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        params, opt_state, gnorm = adamw_update(opt_cfg, params, grads, opt_state)
+        metrics = {"loss": loss, "grad_norm": gnorm, "step": opt_state["step"]}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_step(model: Model):
+    """serve_step(params, cache, tokens (b,), pos ()) -> (next_tokens, logits, cache)."""
+
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = model.decode_step(params, cache, tokens, pos)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, logits, cache
+
+    return serve_step
+
+
+def make_prefill_step(model: Model):
+    """prefill(params, batch) -> last-position logits (b, V)."""
+
+    def prefill(params, batch):
+        logits, _ = model.forward(params, batch)
+        return logits[:, -1, :]
+
+    return prefill
+
+
+def init_optimizer(params) -> dict:
+    return adamw_init(params)

@@ -1,0 +1,11 @@
+import os
+import sys
+from pathlib import Path
+
+# tests run against src/ directly (also works with `pip install -e .`)
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+# NOTE: no xla_force_host_platform_device_count here — smoke tests and
+# benches must see exactly 1 device (dry-run sets its own flag; distributed
+# tests spawn subprocesses).
+import repro  # noqa: E402,F401  (enables x64)

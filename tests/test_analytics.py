@@ -1,0 +1,82 @@
+"""§4 KDD layer: verticalization, rollup prefix table (paper Tables 1-5),
+longest maximal pattern (Example 9), naive Bayes."""
+import numpy as np
+
+from repro.analytics import (build_rollup_prefix_table, compact_rollup,
+                             longest_maximal_pattern, naive_bayes_predict,
+                             naive_bayes_train, verticalize)
+
+TABLE1 = [  # the paper's Table 1 excerpt (IDs 1-10)
+    ["overcast", "cool", "normal", "strong", "yes"],
+    ["overcast", "hot", "high", "weak", "yes"],
+    ["overcast", "hot", "normal", "weak", "yes"],
+    ["overcast", "mild", "high", "strong", "yes"],
+    ["rain", "mild", "high", "weak", "yes"],
+    ["rain", "cool", "normal", "weak", "yes"],
+    ["rain", "cool", "normal", "strong", "no"],
+    ["rain", "mild", "high", "strong", "no"],
+    ["rain", "mild", "normal", "weak", "yes"],
+    ["sunny", "hot", "high", "weak", "no"],
+]
+
+
+def test_verticalize_matches_table2():
+    vt = verticalize(TABLE1)
+    assert vt.rows.shape == (50, 3)  # 10 tuples x 5 columns
+    # first tuple verticalizes to (1, 1..5, vals) — Table 2 layout
+    first = vt.rows[vt.rows[:, 0] == 1]
+    assert list(first[:, 1]) == [1, 2, 3, 4, 5]
+    assert vt.symbols.name(int(first[0, 2]) - 1) == "overcast"
+
+
+def test_rollup_prefix_table_matches_table5():
+    vt = verticalize(TABLE1)
+    myrupt, eng = build_rollup_prefix_table(vt)
+    cr = compact_rollup(myrupt, vt)["root"]
+    # Table 5: overcast(4){ cool(1), hot(2){high(1), normal(1)}, mild(1) }
+    assert cr["overcast"][0] == 4
+    assert cr["overcast"][1]["cool"][0] == 1
+    assert cr["overcast"][1]["hot"][0] == 2
+    assert cr["overcast"][1]["hot"][1]["high"][0] == 1
+    assert cr["overcast"][1]["hot"][1]["normal"][0] == 1
+    assert cr["overcast"][1]["mild"][0] == 1
+    assert cr["rain"][0] == 5 and cr["sunny"][0] == 1
+    # chain from Table 4: overcast>cool>normal>strong>yes, all count 1
+    node = cr["overcast"][1]["cool"][1]
+    assert node["normal"][1]["strong"][1]["yes"][0] == 1
+    # node ids are globally unique (the Table 4 renumbering)
+    assert len(set(myrupt[:, 0])) == len(myrupt)
+
+
+def test_longest_maximal_pattern_example9():
+    vt = verticalize(TABLE1)
+    myrupt, _ = build_rollup_prefix_table(vt)
+    got = longest_maximal_pattern(myrupt, k=2)
+    # brute-force over root-to-leaf paths counting frequent items
+    items: dict = {}
+    for r in myrupt:
+        items[(r[1], r[2])] = items.get((r[1], r[2]), 0) + r[3]
+    freq = {k for k, v in items.items() if v >= 2}
+    byparent: dict = {}
+    for r in myrupt:
+        byparent.setdefault(int(r[4]), []).append(r)
+
+    def walk(node, col, acc):
+        out = [acc]
+        for r in byparent.get(node, []):
+            if r[1] == col:
+                out += walk(int(r[0]), col + 1,
+                            acc + (1 if (r[1], r[2]) in freq else 0))
+        return out
+
+    assert got == max(walk(1, 1, 0))
+
+
+def test_naive_bayes_on_playtennis():
+    vt = verticalize(TABLE1)
+    m = naive_bayes_train(vt)
+    sym = vt.symbols
+    # all-overcast rows are 'yes' in the data => overcast example leans yes
+    ex = {1: sym.intern("overcast") + 1, 2: sym.intern("hot") + 1,
+          3: sym.intern("normal") + 1, 4: sym.intern("weak") + 1}
+    assert sym.name(naive_bayes_predict(m, ex) - 1) == "yes"

@@ -1,0 +1,187 @@
+"""Parser, stratification, PreM, planner — the compiler front half."""
+import numpy as np
+import pytest
+
+from repro.core.ir import Comparison, Const, Var
+from repro.core.parser import ParseError, parse_program
+from repro.core.planner import PlanError, generalized_pivot, plan_program, rwa_cost
+from repro.core.prem import check_prem_numeric, check_prem_structural
+from repro.core.stratify import StratificationError, build_pcg
+
+TC = """
+tc(X,Y) <- arc(X,Y).
+tc(X,Y) <- tc(X,Z), arc(Z,Y).
+"""
+
+SPATH = """
+dpath(X,Z,min<D>) <- darc(X,Z,D).
+dpath(X,Z,min<D>) <- dpath(X,Y,Dxy), darc(Y,Z,Dyz), D = Dxy + Dyz.
+spath(X,Z,D) <- dpath(X,Z,D).
+"""
+
+
+def test_parse_tc():
+    p = parse_program(TC)
+    assert len(p.rules) == 2
+    assert p.idb_predicates() == {"tc"}
+    assert p.edb_predicates() == {"arc"}
+
+
+def test_parse_aggregate_heads():
+    p = parse_program(SPATH)
+    agg_rules = [r for r in p.rules if r.agg]
+    assert len(agg_rules) == 2
+    assert all(r.agg.kind == "min" and r.agg.position == 2 for r in agg_rules)
+
+
+def test_parse_negation_and_anon():
+    p = parse_program("leaf(T) <- node(T, X), ~parent(_, T).")
+    lit = [l for l in p.rules[0].body_literals() if l.negated][0]
+    assert lit.pred == "parent"
+
+
+def test_parse_error_on_garbage():
+    with pytest.raises(ParseError):
+        parse_program("tc(X <- arc(X.")
+
+
+def test_stratification_orders_dependencies_first():
+    pcg = build_pcg(parse_program(SPATH))
+    order = [s for s in pcg.sccs]
+    assert order.index(pcg.mutual_group("dpath")) < order.index(pcg.mutual_group("spath"))
+    assert pcg.is_recursive("dpath") and not pcg.is_recursive("spath")
+
+
+def test_negation_through_recursion_rejected():
+    bad = """
+    p(X) <- q(X).
+    q(X) <- r(X), ~p(X).
+    """
+    with pytest.raises(StratificationError):
+        build_pcg(parse_program(bad))
+
+
+# ---------------------------------------------------------------------------
+# PreM
+# ---------------------------------------------------------------------------
+
+
+def test_prem_holds_for_spath():
+    prog = parse_program(SPATH)
+    rep = check_prem_structural(prog, "dpath", frozenset(["dpath"]))
+    assert rep.holds, rep.reasons
+
+
+def test_prem_rejects_bound_filter():
+    """The paper's counterexample: Dxz < UB as a goal breaks PreM for max."""
+    prog = parse_program("""
+    lpath(X,Z,max<D>) <- darc(X,Z,D).
+    lpath(X,Z,max<D>) <- lpath(X,Y,D1), darc(Y,Z,D2), D = D1 + D2, D < 100.
+    """)
+    rep = check_prem_structural(prog, "lpath", frozenset(["lpath"]))
+    assert not rep.holds
+    assert any("cuts the max" in r or "clamp" in r for r in rep.reasons)
+
+
+def test_prem_min_accepts_upper_bound_filter():
+    """For min, an upper-bound filter is safe (min survives it)."""
+    prog = parse_program("""
+    dpath(X,Z,min<D>) <- darc(X,Z,D).
+    dpath(X,Z,min<D>) <- dpath(X,Y,D1), darc(Y,Z,D2), D = D1 + D2, D < 100.
+    """)
+    rep = check_prem_structural(prog, "dpath", frozenset(["dpath"]))
+    assert rep.holds, rep.reasons
+
+
+def test_prem_mcount_always_monotone():
+    prog = parse_program("""
+    attend(X) <- organizer(X).
+    attend(X) <- cnt(X,N), N >= 3.
+    cnt(Y, mcount<X>) <- attend(X), friend(Y,X).
+    """)
+    rep = check_prem_structural(prog, "cnt", frozenset(["attend", "cnt"]))
+    assert rep.holds
+
+
+def test_prem_numeric_definition():
+    """γ(T(I)) == γ(T(γ(I))) on tuple multisets for min-plus; and a violation."""
+    rng = np.random.default_rng(0)
+    arcs = [(0, 1, 3), (1, 2, 4), (0, 2, 9), (2, 0, 2)]
+
+    def T(tuples):  # one ICO application of Example 1 (set of (x,z,d))
+        out = set(map(tuple, tuples)) | {(x, z, d) for x, z, d in arcs}
+        for (x, y, d1) in list(out):
+            for (y2, z, d2) in arcs:
+                if y == y2:
+                    out.add((x, z, d1 + d2))
+        return np.asarray(sorted(out))
+
+    def gamma_min(tuples):  # is_min((X,Z),(D))
+        best = {}
+        for x, z, d in map(tuple, tuples):
+            best[(x, z)] = min(best.get((x, z), d), d)
+        return np.asarray(sorted((x, z, d) for (x, z), d in best.items()))
+
+    interps = []
+    for _ in range(5):
+        n = rng.integers(0, 6)
+        interps.append(np.asarray(
+            [(int(rng.integers(0, 3)), int(rng.integers(0, 3)),
+              int(rng.integers(1, 12))) for _ in range(n)]).reshape(-1, 3))
+    rep = check_prem_numeric(T, gamma_min, interps,
+                             equal=lambda a, b: a.shape == b.shape and (a == b).all())
+    assert rep.holds, rep.reasons
+
+    # violating γ: naive per-group SUM is NOT PreM (collapsing the group
+    # before the join changes the derived sums) — exactly why the paper
+    # routes sum through monotonic msum + max-premap instead (§2.1).
+    def gamma_sum(tuples):
+        tot = {}
+        for x, z, d in map(tuple, tuples):
+            tot[(x, z)] = tot.get((x, z), 0) + d
+        return np.asarray(sorted((x, z, d) for (x, z), d in tot.items()))
+
+    rep_bad = check_prem_numeric(
+        T, gamma_sum, [np.asarray([(0, 1, 3), (0, 1, 5)])],
+        equal=lambda a, b: a.shape == b.shape and (a == b).all())
+    assert not rep_bad.holds
+
+
+# ---------------------------------------------------------------------------
+# planner: GPS / decomposability / RWA
+# ---------------------------------------------------------------------------
+
+
+def test_tc_has_pivot_and_decomposable_plan():
+    prog = parse_program(TC)
+    assert generalized_pivot(prog, "tc", frozenset(["tc"])) == (0,)
+    plan = plan_program(prog)
+    gp = [g for g in plan.groups if "tc" in g.preds][0]
+    assert gp.pivot["tc"] == (0,) and gp.rwa_cost == 0
+
+
+def test_sg_has_no_pivot():
+    prog = parse_program("""
+    sg(X,Y) <- arc(P,X), arc(P,Y), X != Y.
+    sg(X,Y) <- arc(A,X), sg(A,B), arc(B,Y).
+    """)
+    assert generalized_pivot(prog, "sg", frozenset(["sg"])) is None
+    plan = plan_program(prog)
+    gp = [g for g in plan.groups if "sg" in g.preds][0]
+    assert gp.rwa_cost > 0  # needs shuffling, mirroring Fig. 2(b)
+
+
+def test_rwa_cost_prefers_pivot_partitioning():
+    prog = parse_program(TC)
+    c_pivot = rwa_cost(prog, "tc", frozenset(["tc"]), (0,))
+    c_second = rwa_cost(prog, "tc", frozenset(["tc"]), (1,))
+    assert c_pivot < c_second
+
+
+def test_planner_rejects_non_prem():
+    bad = """
+    lpath(X,Z,max<D>) <- darc(X,Z,D).
+    lpath(X,Z,max<D>) <- lpath(X,Y,D1), darc(Y,Z,D2), D = D1 + D2, D < 100.
+    """
+    with pytest.raises(PlanError):
+        plan_program(parse_program(bad))

@@ -1,0 +1,82 @@
+"""Coverage extensions: monotonic-aggregate surface, walker slice rules,
+engine restartability, vocab/head padding invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import all_arch_names, get_config
+from repro.core.engine import Engine
+from repro.roofline.walker import walk_costs
+
+
+def test_mcount_msum_surface():
+    """mcount/msum parse and evaluate with monotone semantics (§2.1)."""
+    friend = np.array([[1, 0], [2, 0], [2, 1], [1, 2]])
+    organizer = np.array([[0]])
+    eng = Engine("""
+    attend(X) <- organizer(X).
+    attend(X) <- cnt(X,N), N >= 1.
+    cnt(Y, mcount<X>) <- attend(X), friend(Y,X).
+    """, db={"friend": friend, "organizer": organizer}, default_cap=1024).run()
+    assert {int(r[0]) for r in eng.query("attend")} == {0, 1, 2}
+
+    pqs = np.array([[7, 1, 10], [7, 2, 5], [8, 1, 3]])  # (part, store, qty)
+    cs = np.array([[1, 100], [2, 100]])  # store -> city
+    eng2 = Engine("""
+    pcnt(P, C, msum<Q>) <- pqs(P, S, Q), cs(S, C).
+    """, db={"pqs": pqs, "cs": cs}, default_cap=1024).run()
+    rows, vals = eng2.query_agg("pcnt")
+    got = {(int(r[0]), int(r[1])): int(v) for r, v in zip(rows, vals)}
+    assert got == {(7, 100): 15, (8, 100): 3}
+
+
+def test_walker_bills_dus_at_slice_size():
+    """A 64-step scan writing (64, 1024) must not be billed 64 full buffers."""
+    def f(xs):
+        def step(c, x):
+            return c + 1.0, (x * c).sum()
+        _, ys = jax.lax.scan(step, jnp.float32(0), xs)
+        return ys
+
+    hlo = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((64, 1024), jnp.float32)).compile().as_text()
+    c = walk_costs(hlo)
+    full_buffer_billing = 64 * 64 * 1024 * 4  # what the naive model would say
+    assert c.bytes < full_buffer_billing
+
+
+def test_engine_rerun_is_idempotent():
+    """Running the fixpoint again from the answer changes nothing (SetRDD)."""
+    edges = np.array([[0, 1], [1, 2], [2, 0]])
+    prog = """
+    tc(X,Y) <- arc(X,Y).
+    tc(X,Y) <- tc(X,Z), arc(Z,Y).
+    """
+    a = Engine(prog, db={"arc": edges}, default_cap=512).run()
+    tc1 = {tuple(r) for r in a.query("tc")}
+    # feed the answer back as extra EDB facts: the fixpoint must be stable
+    b = Engine("""
+    tc(X,Y) <- arc(X,Y).
+    tc(X,Y) <- seed(X,Y).
+    tc(X,Y) <- tc(X,Z), arc(Z,Y).
+    """, db={"arc": edges, "seed": np.asarray(sorted(tc1))}, default_cap=512).run()
+    assert {tuple(r) for r in b.query("tc")} == tc1
+
+
+def test_head_and_vocab_padding_invariants():
+    for name in all_arch_names():
+        cfg = get_config(name)
+        assert cfg.padded_heads(16) % 16 == 0
+        assert cfg.padded_heads(16) >= cfg.n_heads
+        assert cfg.padded_vocab() % 256 == 0
+        assert cfg.padded_vocab() >= cfg.vocab
+        # layer pattern covers n_layers exactly
+        assert cfg.n_groups * len(cfg.pattern) + len(cfg.tail) == cfg.n_layers
+
+
+def test_autoshard_module_importable():
+    """The GPS-analog search tool exists and exposes the entry point (its
+    full run needs the 512-device env; covered by the dry-run artifacts)."""
+    import importlib.util
+    spec = importlib.util.find_spec("repro.parallel.autoshard")
+    assert spec is not None

@@ -1,0 +1,92 @@
+"""Property tests for the packed-table relational substrate."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.relation import (EMPTY, AggTable, FactTable, Schema,
+                                 expand_join, hash32)
+
+ROWS = st.lists(st.tuples(st.integers(0, 200), st.integers(0, 200)),
+                min_size=0, max_size=60)
+
+
+def _pack(rows, schema):
+    return {tuple(r) for r in rows}
+
+
+@given(ROWS)
+@settings(max_examples=30, deadline=None)
+def test_pack_unpack_roundtrip(rows):
+    schema = Schema((10, 10))
+    t = FactTable.from_numpy(np.asarray(rows or [(0, 0)]), schema, 128)
+    back = {tuple(r) for r in t.to_numpy(schema)}
+    assert back == _pack(rows or [(0, 0)], schema)
+
+
+@given(ROWS, ROWS)
+@settings(max_examples=30, deadline=None)
+def test_union_difference_vs_sets(a, b):
+    schema = Schema((10, 10))
+    ta = FactTable.from_numpy(np.asarray(a).reshape(-1, 2), schema, 256)
+    tb = FactTable.from_numpy(np.asarray(b).reshape(-1, 2), schema, 256)
+    sa, sb = set(map(tuple, a)), set(map(tuple, b))
+    assert {tuple(r) for r in ta.union(tb).to_numpy(schema)} == sa | sb
+    assert {tuple(r) for r in ta.difference(tb).to_numpy(schema)} == sa - sb
+
+
+def test_overflow_flagged_not_silent():
+    schema = Schema((10, 10))
+    rows = np.array([[i, i] for i in range(50)])
+    t = FactTable.from_numpy(rows, schema, 32)
+    assert bool(t.overflow)
+
+
+@given(st.lists(st.tuples(st.integers(0, 30), st.integers(-50, 50)),
+                min_size=1, max_size=80),
+       st.sampled_from(["min", "max", "sum"]))
+@settings(max_examples=40, deadline=None)
+def test_aggtable_merge_vs_dict(pairs, kind):
+    schema = Schema((10,))
+    keys = np.asarray([[k] for k, _ in pairs])
+    vals = np.asarray([v for _, v in pairs])
+    t = AggTable.from_numpy(keys, vals, schema, 256, kind)
+    oracle: dict[int, int] = {}
+    op = {"min": min, "max": max, "sum": lambda a, b: a + b}[kind]
+    for k, v in pairs:
+        oracle[k] = op(oracle[k], v) if k in oracle else v
+    rows, values = t.to_numpy(schema)
+    got = {int(r[0]): int(v) for r, v in zip(rows, values)}
+    assert got == oracle
+
+
+def test_aggtable_delta_is_changed_keys():
+    schema = Schema((10,))
+    t = AggTable.from_numpy(np.array([[1], [2]]), np.array([5, 7]), schema, 64, "min")
+    t2, delta = t.merge(jnp.asarray(schema.pack([jnp.array([1, 2, 3])])),
+                        jnp.asarray([9, 3, 4], jnp.int32))
+    rows, vals = delta.to_numpy(schema)
+    got = {int(r[0]): int(v) for r, v in zip(rows, vals)}
+    assert got == {2: 3, 3: 4}  # key 1 did not improve (9 > 5)
+
+
+def test_expand_join_vs_nested_loop():
+    rng = np.random.default_rng(0)
+    probe = rng.integers(0, 10, 40).astype(np.int64)
+    build = np.sort(rng.integers(0, 10, 30).astype(np.int64))
+    pi, bi, valid, ovf = expand_join(
+        jnp.asarray(probe), jnp.ones(40, bool), jnp.asarray(build),
+        jnp.asarray(30), 1024)
+    got = {(int(p), int(b)) for p, b, v in
+           zip(np.asarray(pi), np.asarray(bi), np.asarray(valid)) if v}
+    want = {(i, j) for i, p in enumerate(probe) for j, b in enumerate(build) if p == b}
+    assert got == want and not bool(ovf)
+
+
+def test_hash32_range_and_determinism():
+    x = jnp.arange(1000, dtype=jnp.int64)
+    h = hash32(x, 7)
+    assert int(h.min()) >= 0 and int(h.max()) < 7
+    assert bool(jnp.array_equal(h, hash32(x, 7)))
+    counts = np.bincount(np.asarray(h), minlength=7)
+    assert counts.min() > 50  # roughly balanced

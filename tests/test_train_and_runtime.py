@@ -1,0 +1,167 @@
+"""Optimizer, grad accumulation, compression, checkpointing, fault tolerance."""
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (AsyncCheckpointer, latest_step, load_checkpoint,
+                              save_checkpoint)
+from repro.checkpoint.store import CheckpointCorrupt
+from repro.configs import get_config
+from repro.data.tokens import TokenPipeline
+from repro.models.model import Model
+from repro.runtime import DriverConfig, TrainDriver, run_with_restarts
+from repro.train import AdamWConfig, init_optimizer, make_train_step
+from repro.train.compress import (dequantize_int8, make_int8_grad_transform,
+                                  quantize_int8)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tiny():
+    cfg = get_config("qwen3-14b", smoke=True)
+    model = Model(cfg, tp=1, use_chunked_attn=False, remat=False)
+    pipe = TokenPipeline(vocab=cfg.vocab, seq_len=32, global_batch=8, seed=3)
+    return cfg, model, pipe
+
+
+def test_loss_decreases():
+    cfg, model, pipe = _tiny()
+    params = model.init(KEY)
+    opt = init_optimizer(params)
+    step = jax.jit(make_train_step(model, AdamWConfig(lr=2e-3, warmup_steps=5,
+                                                      total_steps=100)))
+    losses = []
+    for i in range(30):
+        params, opt, m = step(params, opt, pipe.batch(i % 4))
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3
+
+
+def test_grad_accumulation_equivalence():
+    cfg, model, pipe = _tiny()
+    params = model.init(KEY)
+    batch = pipe.batch(0)
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    s1 = make_train_step(model, opt_cfg, accum_steps=1)
+    s2 = make_train_step(model, opt_cfg, accum_steps=2)
+    p1, _, m1 = jax.jit(s1)(params, init_optimizer(params), batch)
+    p2, _, m2 = jax.jit(s2)(params, init_optimizer(params), batch)
+    diffs = [float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+             for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2))]
+    assert max(diffs) < 2e-3  # equal up to bf16 accumulation-order noise
+
+
+def test_int8_quantization_unbiased_and_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(1), (4096,), jnp.float32)
+    q, s = quantize_int8(x, jax.random.PRNGKey(2))
+    y = dequantize_int8(q, s)
+    assert float(jnp.max(jnp.abs(y - x))) <= float(s) + 1e-6  # one quantum
+    # stochastic rounding is unbiased: mean error ~ 0
+    errs = []
+    for i in range(16):
+        q, s = quantize_int8(x, jax.random.PRNGKey(100 + i))
+        errs.append(np.asarray(dequantize_int8(q, s) - x))
+    assert abs(np.mean(errs)) < float(s) * 0.05
+
+
+def test_grad_transform_hook_runs():
+    cfg, model, pipe = _tiny()
+    params = model.init(KEY)
+    step = jax.jit(make_train_step(
+        model, AdamWConfig(), grad_transform=make_int8_grad_transform()))
+    p, o, m = step(params, init_optimizer(params), pipe.batch(0))
+    assert bool(jnp.isfinite(m["loss"]))
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(10, dtype=jnp.float32),
+            "b": {"c": jnp.ones((3, 4), jnp.bfloat16), "step": np.int64(7)}}
+    save_checkpoint(tmp_path, 7, tree, n_shards=3)
+    out, step = load_checkpoint(tmp_path, tree)
+    assert step == 7
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        xa = np.asarray(jnp.asarray(x, jnp.float32)) if hasattr(x, "dtype") else np.asarray(x)
+        ya = np.asarray(jnp.asarray(y, jnp.float32)) if hasattr(y, "dtype") else np.asarray(y)
+        assert np.array_equal(xa, ya)
+
+
+def test_checkpoint_shape_mismatch_detected(tmp_path):
+    save_checkpoint(tmp_path, 1, {"a": jnp.zeros(4)})
+    with pytest.raises(CheckpointCorrupt):
+        load_checkpoint(tmp_path, {"a": jnp.zeros(5)})
+
+
+def test_incomplete_checkpoint_ignored(tmp_path):
+    save_checkpoint(tmp_path, 1, {"a": jnp.zeros(4)})
+    # a torn write: directory without manifest
+    (tmp_path / "step_00000002").mkdir()
+    assert latest_step(tmp_path) == 1
+
+
+def test_async_checkpointer(tmp_path):
+    ck = AsyncCheckpointer(tmp_path, n_shards=2)
+    ck.save(5, {"x": jnp.arange(8)})
+    ck.close()
+    out, step = load_checkpoint(tmp_path, {"x": jnp.arange(8)})
+    assert step == 5 and np.array_equal(np.asarray(out["x"]), np.arange(8))
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance / elasticity
+# ---------------------------------------------------------------------------
+
+
+def test_restart_is_bit_identical(tmp_path):
+    cfg, model, pipe = _tiny()
+    opt = AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=60)
+    dA = TrainDriver(model, opt, pipe,
+                     DriverConfig(ckpt_dir=str(tmp_path / "a"), ckpt_every=8,
+                                  max_steps=20, log_every=1000))
+    dA.run(20)
+
+    def mk():
+        return TrainDriver(model, opt, pipe,
+                           DriverConfig(ckpt_dir=str(tmp_path / "b"),
+                                        ckpt_every=8, max_steps=20,
+                                        log_every=1000, fail_at_steps=(13,)))
+    dB = run_with_restarts(mk, 20)
+    for a, b in zip(jax.tree.leaves(dA.params), jax.tree.leaves(dB.params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_straggler_detection():
+    import time
+    cfg, model, pipe = _tiny()
+    d = TrainDriver(model, AdamWConfig(), pipe,
+                    DriverConfig(ckpt_dir="/tmp/_unused_ck", ckpt_every=10 ** 9,
+                                 max_steps=10, log_every=1000,
+                                 straggler_slack=3.0))
+    orig = d.step_fn
+
+    def slow_step(p, o, b):
+        if d.step == 6:
+            time.sleep(1.0)
+        return orig(p, o, b)
+
+    d.step_fn = slow_step
+    d.run(10)
+    assert any(e["step"] == 6 for e in d.straggler_events)
+
+
+def test_elastic_reshard_partitions_stream():
+    cfg, model, pipe = _tiny()
+    d = TrainDriver(model, AdamWConfig(), pipe,
+                    DriverConfig(ckpt_dir="/tmp/_unused_ck2", max_steps=1,
+                                 log_every=1000))
+    full = d.pipeline.batch(0)["tokens"]
+    d.reshard(n_hosts=2, host_id=1)
+    half = d.pipeline.batch(0)["tokens"]
+    assert half.shape[0] == full.shape[0] // 2
