@@ -1,0 +1,110 @@
+"""Full-model vs magic-restricted evaluation (§8-style synthetic graphs).
+
+For each Table-6 family instance, run TC twice:
+
+  * ``full``  — ``Engine.run()``: the perfect model of ``tc``;
+  * ``magic`` — ``Engine.ask("tc", (src, None))``: the magic-sets rewrite
+    seeded with one source vertex;
+  * ``dense`` — the frontier-seeded ``form="vector"`` fixpoint (same query)
+    where the program shape admits it.
+
+Reported per instance: wall seconds, result rows, and the semi-naive
+``generated`` counter (facts before dedup — the paper's Tables 7/8 work
+measure), plus the derived speedup/pruning ratios.  Results land in
+``BENCH_magic.json`` next to this file.
+
+Usage:  PYTHONPATH=src python benchmarks/bench_magic.py
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.engine import Engine
+from repro.data.graphs import gnp_graph, grid_graph, tree_graph
+
+TC = """
+tc(X,Y) <- arc(X,Y).
+tc(X,Y) <- tc(X,Z), arc(Z,Y).
+"""
+
+
+def _instances() -> dict[str, tuple[np.ndarray, int]]:
+    """(edges, query source) per family — sources picked for deep frontiers."""
+    return {
+        "Tree6": (tree_graph(6, seed=11), 0),
+        "Grid15": (grid_graph(15), 0),
+        "G400": (gnp_graph(400, 0.005, seed=5), 0),
+    }
+
+
+def _timed(fn, repeats: int = 3):
+    out = fn()  # warmup + correctness sample
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return out, ts[len(ts) // 2]
+
+
+def bench_instance(name: str, edges: np.ndarray, src: int, caps: int) -> dict:
+    eng = Engine(TC, db={"arc": edges}, default_cap=caps, join_cap=caps, bits=18)
+
+    full_rows, t_full = _timed(
+        lambda: Engine(TC, db={"arc": edges}, default_cap=caps,
+                       join_cap=caps, bits=18).run().query("tc"))
+    full_gen = int(Engine(TC, db={"arc": edges}, default_cap=caps,
+                          join_cap=caps, bits=18).run().stats["tc"].generated)
+
+    # the demanded set is frontier-sized: give the restricted run tables to
+    # match (static shapes are the cost model — pruning becomes speed here)
+    magic_caps = 1 << 13
+    magic_rows, t_magic = _timed(
+        lambda: eng.ask("tc", (src, None), default_cap=magic_caps,
+                        join_cap=magic_caps))
+    magic_gen = int(eng.stats["tc__bf"].generated)
+
+    dense_rows, t_dense = _timed(lambda: eng.ask_dense("tc", (src, None)))
+
+    restricted = {tuple(map(int, r)) for r in full_rows if int(r[0]) == src}
+    assert {tuple(map(int, r)) for r in magic_rows} == restricted
+    assert {tuple(map(int, r)) for r in dense_rows} == restricted
+
+    rec = {
+        "graph": name,
+        "edges": int(len(edges)),
+        "src": src,
+        "full_rows": int(len(full_rows)),
+        "query_rows": int(len(magic_rows)),
+        "full_seconds": t_full,
+        "magic_seconds": t_magic,
+        "dense_seconds": t_dense,
+        "full_generated": full_gen,
+        "magic_generated": magic_gen,
+        "speedup_magic": t_full / t_magic if t_magic else float("inf"),
+        "generated_ratio": full_gen / max(magic_gen, 1),
+    }
+    print(f"{name:8s} edges={rec['edges']:6d} full={t_full:.3f}s "
+          f"magic={t_magic:.3f}s dense={t_dense:.3f}s "
+          f"speedup={rec['speedup_magic']:.1f}x "
+          f"gen {full_gen} -> {magic_gen} ({rec['generated_ratio']:.1f}x less)",
+          flush=True)
+    return rec
+
+
+def main():
+    records = []
+    for name, (edges, src) in _instances().items():
+        records.append(bench_instance(name, edges, src, caps=1 << 18))
+    out = Path(__file__).parent / "BENCH_magic.json"
+    out.write_text(json.dumps(records, indent=2))
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Fast CI tier: lint-free imports + the quick test tier (slow-marked tests —
+# the multi-minute JAX compiles — are excluded by pytest.ini's addopts).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== import lint =="
+python - <<'EOF'
+import importlib
+
+MODULES = [
+    "repro",
+    "repro.core", "repro.core.engine", "repro.core.magic", "repro.core.parser",
+    "repro.core.planner", "repro.core.ir", "repro.core.stratify",
+    "repro.core.prem", "repro.core.relation", "repro.core.seminaive",
+    "repro.core.semiring", "repro.core.distributed",
+    "repro.kernels", "repro.data.graphs",
+]
+for m in MODULES:
+    importlib.import_module(m)
+print(f"{len(MODULES)} modules import clean")
+EOF
+
+echo "== fast test tier =="
+python -m pytest -q

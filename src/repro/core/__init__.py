@@ -1,12 +1,16 @@
 """The paper's primary contribution: recursive Datalog with
-aggregates-in-recursion under PreM, parallel semi-naive evaluation, and the
-TPU-native semiring-fixpoint adaptation."""
+aggregates-in-recursion under PreM, parallel semi-naive evaluation, magic-sets
+query rewriting, and the TPU-native semiring-fixpoint adaptation."""
 from .engine import CapacityError, Engine
-from .parser import parse_program
-from .planner import plan_program
+from .magic import MagicRewrite, detect_frontier_lowering
+from .magic import rewrite as magic_rewrite
+from .parser import parse_program, parse_query
+from .planner import PlanOptions, plan_program
 from .prem import check_prem_numeric, check_prem_structural
 from .semiring import BOOL, MAX_PLUS, MIN_PLUS, PLUS_TIMES, Semiring
 
-__all__ = ["Engine", "CapacityError", "parse_program", "plan_program",
+__all__ = ["Engine", "CapacityError", "parse_program", "parse_query",
+           "plan_program", "PlanOptions", "magic_rewrite", "MagicRewrite",
+           "detect_frontier_lowering",
            "check_prem_structural", "check_prem_numeric", "Semiring",
            "BOOL", "MIN_PLUS", "MAX_PLUS", "PLUS_TIMES"]

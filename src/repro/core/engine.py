@@ -4,8 +4,13 @@
 
     eng = Engine(program_text, db={"arc": edges}, caps={"tc": 1 << 20})
     eng.run()
-    tc = eng.query("tc")          # numpy rows
+    tc = eng.query("tc")          # numpy rows (full perfect model)
     dist = eng.query_agg("spath") # (rows, values)
+
+    # demand-driven evaluation (magic-sets rewrite, evaluates only what the
+    # query needs):
+    rows = eng.ask("tc", (1, None))          # == full tc restricted to src 1
+    eng2 = Engine(text + "?- tc(1, X).", db=...).run()  # same, via ?- goal
 
 Evaluation follows the iterated-fixpoint (perfect-model) schedule from §2:
 SCCs of the PCG evaluate leaves-first; recursive SCCs run the PSN fixpoint of
@@ -13,6 +18,13 @@ Algorithm 1 under ``jax.lax.while_loop``; results materialize and become base
 relations for higher strata.  Aggregates-in-recursion run PreM-transferred
 (eager ⊕-merge per iteration) — the planner refuses programs where PreM fails
 structurally.
+
+Query-driven runs plan through the magic-sets pass (``magic.py``): the
+program is adorned from the query goal, guarded by magic predicates seeded
+with the query constants, and only the demanded strata evaluate.  When a
+query binds the pivot of a decomposable binary recursion, :meth:`Engine.
+ask_dense` additionally lowers to the dense ``form="vector"`` fixpoint seeded
+with the query frontier row.
 """
 from __future__ import annotations
 
@@ -24,16 +36,44 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .ir import Arith, Comparison, Const, Program, Var
-from .parser import parse_program
-from .planner import (CompiledRule, EdbJoinStep, GroupPlan, IdbJoinStep, PlanError,
-                      ProgramPlan, SourceDelta, SourceEdb, plan_program)
+from .ir import Arith, Comparison, Const, Literal, Program, Term, Var, fresh_var
+from .magic import detect_frontier_lowering
+from .parser import parse_program, parse_query
+from .planner import (CompiledRule, EdbJoinStep, GroupPlan, IdbJoinStep,
+                      PlanError, PlanOptions, ProgramPlan, SourceDelta,
+                      SourceEdb, plan_program)
 from .relation import EMPTY, AggTable, FactTable, Schema, expand_join, _MERGE_INIT
-from .seminaive import Bindings, EdbIndex, build_edb_index, join_edb, join_idb_prefix
+from .seminaive import (Bindings, EdbIndex, build_edb_index, join_edb,
+                        join_idb_prefix, reachable_from_dense,
+                        single_source_distances_dense)
 
 
 class CapacityError(RuntimeError):
     pass
+
+
+QuerySpec = Union[str, Literal, tuple]
+
+
+def as_query_literal(query: QuerySpec, constants: dict[str, int] | None = None) -> Literal:
+    """Normalize the query forms ``"tc(1, X)"`` / ``("tc", (1, None))`` /
+    :class:`Literal` into a query goal literal (None/vars = free)."""
+    if isinstance(query, Literal):
+        return query
+    if isinstance(query, str):
+        return parse_query(query, constants)
+    if isinstance(query, tuple) and len(query) == 2 and isinstance(query[0], str):
+        pred, args = query
+        terms: list[Term] = []
+        for a in args:
+            if a is None:
+                terms.append(fresh_var("_q"))
+            elif isinstance(a, (Var, Const)):
+                terms.append(a)
+            else:
+                terms.append(Const(int(a)))
+        return Literal(pred, tuple(terms))
+    raise ValueError(f"cannot interpret query spec {query!r}")
 
 
 @dataclasses.dataclass
@@ -53,19 +93,33 @@ class Engine:
         join_cap: int | None = None,
         max_iters: int = 1 << 16,
         constants: dict[str, int] | None = None,
+        query: QuerySpec | None = None,
+        magic: bool = True,
     ):
         if isinstance(program, str):
             program = parse_program(program, constants=constants)
-        self.program = program
-        self.plan: ProgramPlan = plan_program(program)
+        self.source_program = program
+        if query is None and program.queries:
+            if len(program.queries) > 1:
+                raise ValueError(
+                    f"program has {len(program.queries)} '?-' goals; an "
+                    "Engine evaluates one query — use ask() for the others")
+            query = program.queries[0]
+        qlit = as_query_literal(query, constants) if query is not None else None
+        self.magic = magic
+        self.plan: ProgramPlan = plan_program(
+            program, PlanOptions(query=qlit, magic=magic))
+        # groups/facts reference the post-pass (possibly magic-rewritten) rules
+        self.program = self.plan.rewritten
         self.bits = bits
         self.caps = dict(caps or {})
         self.default_cap = default_cap
         self.join_cap = join_cap
         self.max_iters = max_iters
-        self.db: dict[str, np.ndarray] = {
-            k: np.asarray(v, np.int64).reshape((len(v), -1)) for k, v in db.items()
-        }
+        def _norm(v):
+            v = np.asarray(v, np.int64)
+            return v[:, None] if v.ndim == 1 else v  # reshape(-1) chokes on 0 rows
+        self.db: dict[str, np.ndarray] = {k: _norm(v) for k, v in db.items()}
         limit = (1 << bits) - 1
         for k, v in self.db.items():
             if v.size and (v.min() < 0 or v.max() > limit):
@@ -81,6 +135,8 @@ class Engine:
     def run(self) -> "Engine":
         for gp in self.plan.groups:
             self._eval_group(gp)
+        if self.plan.query_pred is not None:
+            self._finalize_query()
         return self
 
     def query(self, pred: str) -> np.ndarray:
@@ -91,6 +147,153 @@ class Engine:
         rows, vals = self._result(pred)
         assert vals is not None, f"{pred} is not an aggregate predicate"
         return rows, vals
+
+    def ask(self, pred: QuerySpec, args: tuple | None = None, verify: bool = False,
+            caps: dict[str, int] | None = None, default_cap: int | None = None,
+            join_cap: int | None = None):
+        """Demand-driven query: magic-rewrite, evaluate only demanded strata.
+
+        ``ask("tc", (1, None))`` returns exactly the rows of the full-model
+        ``query("tc")`` with first column 1 — computed bottom-up on the
+        magic-restricted program, not by post-filtering the perfect model.
+        Aggregate predicates return ``(rows, values)``.  ``verify=True``
+        cross-checks the result against the full-model path (slow; testing).
+
+        ``caps``/``default_cap``/``join_cap`` override this engine's table
+        capacities for the restricted run — the demanded set is usually
+        orders of magnitude smaller than the perfect model, and in a
+        static-shape engine smaller tables are where pruning becomes speed.
+        """
+        q = as_query_literal(pred if args is None else (pred, args))
+        if q.pred in self.db:  # EDB query: a pure selection
+            rows = self.db[q.pred]
+            for i, a in enumerate(q.args):
+                if isinstance(a, Const):
+                    rows = rows[rows[:, i] == a.value]
+            return rows
+        sub = self._query_engine(q, caps=caps, default_cap=default_cap,
+                                 join_cap=join_cap).run()
+        for k, v in sub.stats.items():
+            # adorned/magic stats merge in (latest ask wins); never clobber
+            # stats of predicates this engine materialized itself (the sub
+            # aliases its restricted result under the original name)
+            if k not in self.materialized:
+                self.stats[k] = v
+        info = sub._pred_info[sub.plan.query_pred]
+        out = sub.query_agg(q.pred) if info.is_agg else sub.query(q.pred)
+        if verify:
+            self._verify_ask(q, out, info.is_agg)
+        return out
+
+    def ask_dense(self, pred: str, args: tuple, matmul=None):
+        """Single-source fast path: lower a magic-restricted *decomposable*
+        program onto the dense ``form="vector"`` semiring fixpoint seeded with
+        the query frontier row (the dense analog of ``tc_decomposable``).
+
+        Requires the canonical TC / shortest-path shape with the pivot (first)
+        argument bound and everything else free; raises ``PlanError``
+        otherwise.
+        """
+        low = detect_frontier_lowering(self.source_program, pred)
+        q = as_query_literal((pred, args))
+        bound_ok = (len(q.args) >= 2 and isinstance(q.args[0], Const)
+                    and all(isinstance(a, Var) for a in q.args[1:]))
+        if low is None or not bound_ok:
+            raise PlanError(
+                f"query {q!r} does not admit the dense frontier lowering "
+                "(need a decomposable TC/spath shape with the pivot bound)")
+        src = int(q.args[0].value)
+        edges = self.db[low.edb]
+        if len(edges) == 0:  # no arcs -> nothing reachable
+            rows = np.zeros((0, 2), np.int64)
+            return rows if low.kind == "bool" else (rows, np.zeros((0,), np.int64))
+        n = max(int(edges[:, :2].max()) + 1, src + 1)
+        if low.kind == "bool":
+            adj = np.zeros((n, n), bool)
+            adj[edges[:, 0], edges[:, 1]] = True
+            res = reachable_from_dense(jnp.asarray(adj), src, matmul=matmul)
+            reach = np.asarray(res.table)
+            dst = np.nonzero(reach)[0]
+            out = np.stack([np.full(len(dst), src, np.int64),
+                            dst.astype(np.int64)], axis=1)
+        else:
+            w = np.full((n, n), np.inf, np.float32)
+            np.minimum.at(w, (edges[:, 0], edges[:, 1]), edges[:, 2].astype(np.float32))
+            res = single_source_distances_dense(jnp.asarray(w), src, matmul=matmul)
+            d = np.asarray(res.table)
+            dst = np.nonzero(np.isfinite(d))[0]
+            rows = np.stack([np.full(len(dst), src, np.int64),
+                             dst.astype(np.int64)], axis=1)
+            out = (rows, d[dst].astype(np.int64))
+        self.stats[f"{pred}__dense"] = GroupStats(
+            iterations=int(res.iterations), generated=int(res.generated))
+        return out
+
+    def _query_engine(self, q: Literal, caps=None, default_cap=None,
+                      join_cap=None) -> "Engine":
+        kwargs = dict(db=self.db, bits=self.bits,
+                      caps=self.caps if caps is None else caps,
+                      default_cap=default_cap or self.default_cap,
+                      join_cap=join_cap or self.join_cap,
+                      max_iters=self.max_iters)
+        try:
+            return Engine(self.source_program, query=q, magic=self.magic, **kwargs)
+        except PlanError:
+            # magic bodies the join planner cannot order (e.g. cartesian
+            # magic prefixes) fall back to demanded-strata + residual filter
+            return Engine(self.source_program, query=q, magic=False, **kwargs)
+
+    def _verify_ask(self, q: Literal, got, is_agg: bool):
+        if q.pred in self.materialized:
+            full = self
+        else:
+            full = Engine(self.source_program, db=self.db, bits=self.bits,
+                          caps=self.caps, default_cap=self.default_cap,
+                          join_cap=self.join_cap, max_iters=self.max_iters).run()
+        info = full._pred_info[q.pred]
+        consts = [(i, int(a.value)) for i, a in enumerate(q.args)
+                  if isinstance(a, Const)]
+        if is_agg:
+            rows, vals = full.query_agg(q.pred)
+            mask = np.ones(len(rows), bool)
+            for pos, c in consts:
+                mask &= (vals == c) if pos == info.agg_pos \
+                    else (rows[:, info.key_rank(pos)] == c)
+            want = {(*map(int, r), int(v)) for r, v in zip(rows[mask], vals[mask])}
+            have = {(*map(int, r), int(v)) for r, v in zip(got[0], got[1])}
+        else:
+            rows = full.query(q.pred)
+            mask = np.ones(len(rows), bool)
+            for pos, c in consts:
+                mask &= rows[:, pos] == c
+            want = {tuple(map(int, r)) for r in rows[mask]}
+            have = {tuple(map(int, r)) for r in got}
+        if want != have:
+            raise AssertionError(
+                f"ask({q!r}) disagrees with the full-model path: "
+                f"missing={sorted(want - have)[:5]} extra={sorted(have - want)[:5]}")
+
+    def _finalize_query(self):
+        """Restrict the query predicate's result by residual constants and
+        alias it (materialization + stats) under the original name."""
+        qp = self.plan.query_pred
+        orig = self.plan.aliases.get(qp, qp)
+        if qp not in self.materialized:
+            return
+        rows, vals = self.materialized[qp]
+        info = self._pred_info[qp]
+        mask = np.ones(len(rows), bool)
+        for pos, c in self.plan.residual_filters:
+            if info.is_agg and pos == info.agg_pos:
+                mask &= np.asarray(vals) == c
+            else:
+                mask &= np.asarray(rows[:, info.key_rank(pos)]) == c
+        if not mask.all():
+            rows = rows[mask]
+            vals = vals[mask] if vals is not None else None
+        self.materialized[qp] = (rows, vals)
+        self.materialized[orig] = self.materialized[qp]
+        self.stats[orig] = self.stats[qp]
 
     def _result(self, pred: str):
         if pred not in self.materialized:
@@ -123,7 +326,14 @@ class Engine:
         return Schema(tuple([self.bits] * info.key_arity))
 
     def _cap(self, pred: str) -> int:
-        return self.caps.get(pred, self.default_cap)
+        if pred in self.caps:
+            return self.caps[pred]
+        # adorned (tc__bf) and magic (m__tc__bf) predicates inherit the
+        # original predicate's capacity so caps= keeps working under ask()
+        orig = self.plan.aliases.get(pred)
+        if orig is not None and orig in self.caps:
+            return self.caps[orig]
+        return self.default_cap
 
     def _empty_table(self, info):
         if info.is_agg:
@@ -135,14 +345,31 @@ class Engine:
     # -- group evaluation -----------------------------------------------------
 
     def _eval_group(self, gp: GroupPlan):
+        # Pre-build every EDB index this group probes OUTSIDE the jitted
+        # fixpoint: indexes built lazily while tracing would be cached as
+        # tracers and leak into later groups that share the cache key.
+        for cr in gp.exit_rules + gp.rec_rules:
+            for step in cr.joins:
+                if isinstance(step, EdbJoinStep):
+                    self._index(step.rel, step.build_cols)
+
         state = {p: {"all": self._empty_table(info), "delta": None}
                  for p, info in gp.preds.items()}
 
-        # facts (rules with empty bodies)
+        # facts (rules with empty bodies; includes magic seed facts)
+        limit = (1 << self.bits) - 1
         for pred, info in gp.preds.items():
             facts = [r for r in self.program.rules_for(pred) if r.is_fact()]
             if facts:
                 rows = np.array([[a.value for a in r.head.args] for r in facts], np.int64)
+                key_cols = [i for i in range(rows.shape[1])
+                            if not (info.is_agg and i == info.agg_pos)]
+                kv = rows[:, key_cols]
+                if kv.size and (kv.min() < 0 or kv.max() > limit):
+                    raise ValueError(
+                        f"fact/query constant for {pred!r} exceeds the "
+                        f"{self.bits}-bit packed domain (packing would "
+                        f"silently truncate)")
                 keys, vals = self._pack_rows(rows, info)
                 contrib = (keys, vals, jnp.zeros((), bool))
                 state[pred]["all"], _ = self._merge_contribs(state[pred]["all"], [contrib], info)
@@ -297,9 +524,16 @@ class Engine:
             valid = jnp.arange(t.capacity) < t.count
             b = Bindings(cols, valid, t.overflow & False)
         else:
-            rows = jnp.asarray(self._rows_of(cr.source.rel))
+            np_rows = self._rows_of(cr.source.rel)
+            for col, const in cr.source.select:  # pushed-down selections
+                np_rows = np_rows[np.asarray(np_rows[:, col]) == const]
+            if len(np_rows):
+                valid = jnp.ones((np_rows.shape[0],), bool)
+            else:  # keep shapes non-empty: one all-invalid row
+                np_rows = np.zeros((1, self._rows_of(cr.source.rel).shape[1]), np.int64)
+                valid = jnp.zeros((1,), bool)
+            rows = jnp.asarray(np_rows)
             cols = {v: rows[:, i].astype(jnp.int32) for v, i in cr.source.intro}
-            valid = jnp.ones((rows.shape[0],), bool)
             b = Bindings(cols, valid, jnp.zeros((), bool))
 
         # --- joins

@@ -150,6 +150,9 @@ class Rule:
 @dataclasses.dataclass
 class Program:
     rules: list[Rule]
+    #: query goals (``?- tc(1, X).``) — demand patterns for the magic-sets
+    #: rewrite (``magic.py``); an empty list means "materialize everything".
+    queries: list[Literal] = dataclasses.field(default_factory=list)
 
     def predicates(self) -> set[str]:
         preds = set()
@@ -169,7 +172,9 @@ class Program:
         return [r for r in self.rules if r.head.pred == pred]
 
     def __repr__(self):
-        return "\n".join(map(repr, self.rules))
+        lines = [repr(r) for r in self.rules]
+        lines += [f"?- {q!r}." for q in self.queries]
+        return "\n".join(lines)
 
 
 # ---------------------------------------------------------------------------

@@ -23,6 +23,7 @@ from .ir import AGG_KINDS, AggSpec, Arith, Comparison, Const, Goal, Literal, Pro
 
 _TOKEN = re.compile(
     r"\s*(?:"
+    r"(?P<query>\?-)|"
     r"(?P<arrow><-)|"
     r"(?P<cmp><=|>=|!=|<|>|=)|"
     r"(?P<lpar>\()|(?P<rpar>\))|"
@@ -80,13 +81,46 @@ def _is_var_name(name: str) -> bool:
 
 
 def parse_program(text: str, constants: dict[str, int] | None = None) -> Program:
-    """Parse rules; lower-case symbolic constants resolve via ``constants``."""
+    """Parse rules and query goals (``?- tc(1, X).``); lower-case symbolic
+    constants resolve via ``constants``."""
     constants = constants or {}
     s = _Stream(_tokenize(text))
-    rules = []
+    rules, queries = [], []
     while s.peek()[0] != "eof":
-        rules.append(_parse_rule(s, constants))
-    return Program(rules)
+        if s.peek()[0] == "query":
+            s.next()
+            queries.append(_parse_query_literal(s, constants))
+            s.expect("dot")
+        else:
+            rules.append(_parse_rule(s, constants))
+    return Program(rules, queries=queries)
+
+
+def parse_query(text: str, constants: dict[str, int] | None = None) -> Literal:
+    """Parse a single query goal: ``tc(1, X)`` or ``?- tc(1, X).``."""
+    s = _Stream(_tokenize(text))
+    if s.peek()[0] == "query":
+        s.next()
+    lit = _parse_query_literal(s, constants or {})
+    if s.peek()[0] == "dot":
+        s.next()
+    if s.peek()[0] != "eof":
+        raise ParseError(f"trailing tokens after query goal: {s.peek()}")
+    return lit
+
+
+def _parse_query_literal(s: _Stream, constants) -> Literal:
+    """A plain positive literal — constants or free vars in any position."""
+    _, pred = s.expect("name")
+    if _is_var_name(pred):
+        raise ParseError(f"query predicate must be lower-case, got {pred!r}")
+    s.expect("lpar")
+    args = [_parse_term(s, constants)]
+    while s.peek()[0] == "comma":
+        s.next()
+        args.append(_parse_term(s, constants))
+    s.expect("rpar")
+    return Literal(pred, tuple(args))
 
 
 def _parse_term(s: _Stream, constants) -> Term:

@@ -1,16 +1,23 @@
-"""Program planner: IR rules -> physical plans.
+"""Program planner: IR rules -> physical plans, as a pipeline of named passes.
 
-Responsibilities (mirroring the BigDatalog compiler, §6.2/6.3/7.3):
+Compilation runs ``normalize -> rewrite(magic | demand) -> stratify ->
+compile_group`` (the pass list is recorded on the resulting plan), mirroring
+the BigDatalog compiler (§6.2/6.3/7.3):
 
-* stratum-ordered evaluation schedule over the PCG condensation;
-* per recursive SCC: compile exit/recursive rules into ``CompiledRule``
-  pipelines (source + join sequence + interpreted goals + head projection);
-* semi-naive delta-choice expansion for non-linear rules (δ-rewriting);
-* **generalized pivoting** (Seib & Lausen): detect a pivot set => the plan is
-  decomposable (shuffle-free recursion, paper Figure 4);
-* **discriminating-set selection** with the RWA cost model c(N) ∈ {0,1,3}
-  (§7.3), brute-force over small candidate sets exactly like BigDatalog-MC;
-* pattern-matching binary-recursion programs onto the dense semiring engine.
+* **normalize** — rule dedup + arity consistency checks;
+* **rewrite** — when :class:`PlanOptions` carries a query goal, the
+  magic-sets rewrite of ``magic.py`` (or, with ``magic=False``, the weaker
+  demand restriction to the query's reachable strata);
+* **stratify** — PCG condensation + stratum order;
+* **compile_group** — per SCC: exit/recursive rules into ``CompiledRule``
+  pipelines (source + join sequence + interpreted goals + head projection),
+  semi-naive delta-choice expansion for non-linear rules (δ-rewriting),
+  **generalized pivoting** (Seib & Lausen: pivot set => decomposable,
+  shuffle-free recursion, paper Figure 4) and **discriminating-set
+  selection** with the RWA cost model c(N) ∈ {0,1,3} (§7.3).
+
+Query constants are pushed *into* the physical operators (``SourceEdb``
+selections and ``EdbJoinStep`` constant probes) instead of post-filtering.
 """
 from __future__ import annotations
 
@@ -19,6 +26,8 @@ import itertools
 from typing import Union
 
 from .ir import AggSpec, Arith, Comparison, Const, Literal, Program, Rule, Term, Var, fresh_var
+from .magic import MagicError, MagicRewrite
+from .magic import rewrite as magic_rewrite
 from .prem import check_prem_structural
 from .stratify import PCG, StratificationError, build_pcg
 
@@ -55,12 +64,13 @@ class SourceDelta:
 class SourceEdb:
     rel: str
     intro: tuple[tuple[str, int], ...]  # (var, column)
+    select: tuple[tuple[int, int], ...] = ()  # (column, constant) pre-filters
 
 
 @dataclasses.dataclass(frozen=True)
 class EdbJoinStep:
     rel: str
-    probe_vars: tuple[str, ...]
+    probe_vars: tuple[Union[str, int], ...]  # var name, or int constant probe
     build_cols: tuple[int, ...]
     intro: tuple[tuple[str, int], ...]
     negated: bool = False  # anti-join (stratified negation)
@@ -114,10 +124,34 @@ class GroupPlan:
 
 
 @dataclasses.dataclass
+class PlanOptions:
+    """Configuration for the pass pipeline.
+
+    ``query``   — a query goal (constants = bound); enables demand-driven
+                  rewriting and result restriction.
+    ``magic``   — apply the magic-sets rewrite for the query (otherwise only
+                  the demanded strata are evaluated and constants filter the
+                  result).
+    ``push_constants`` — compile constants in EDB body literals into source
+                  selections / constant join probes instead of post-filters.
+    """
+
+    query: Literal | None = None
+    magic: bool = True
+    push_constants: bool = True
+
+
+@dataclasses.dataclass
 class ProgramPlan:
-    program: Program
+    program: Program  # the source program handed to plan_program
     pcg: PCG
     groups: list[GroupPlan]  # stratum/topological order
+    rewritten: Program | None = None  # program the groups compile (post-passes)
+    options: PlanOptions = dataclasses.field(default_factory=PlanOptions)
+    passes: tuple[str, ...] = ()
+    query_pred: str | None = None  # (adorned) predicate answering the query
+    aliases: dict[str, str] = dataclasses.field(default_factory=dict)
+    residual_filters: tuple[tuple[int, int], ...] = ()  # (arg pos, const)
 
 
 class PlanError(ValueError):
@@ -133,12 +167,16 @@ def _term_key(t: Term) -> Union[str, int]:
     return t.name if isinstance(t, Var) else int(t.value)
 
 
-def _normalize_literal(lit: Literal, comps: list[Comparison]) -> Literal:
-    """Replace constants/repeated vars in args with fresh vars + equality goals."""
+def _normalize_literal(lit: Literal, comps: list[Comparison], push_consts: bool) -> Literal:
+    """Replace repeated vars (always) and constants (unless pushed down into
+    the physical operators) with fresh vars + equality goals."""
     seen: set[str] = set()
     args: list[Term] = []
     for a in lit.args:
         if isinstance(a, Const):
+            if push_consts:
+                args.append(a)
+                continue
             v = fresh_var("_c")
             comps.append(Comparison("=", v, a))
             args.append(v)
@@ -157,11 +195,18 @@ def compile_rule(
     group: frozenset[str],
     pred_info: dict[str, PredInfo],
     delta_choice: int | None,
+    options: PlanOptions | None = None,
 ) -> CompiledRule:
     """Compile one rule with a chosen delta occurrence (None => exit rule)."""
+    options = options or PlanOptions()
     extra_comps: list[Comparison] = []
+    # constants are pushed down only for literals handled as EDB scans/probes;
+    # in-group (delta) literals join on packed key columns and keep the
+    # normalize-to-equality form.
     pos_lits = [
-        _normalize_literal(l, extra_comps) for l in rule.body_literals() if not l.negated
+        _normalize_literal(
+            l, extra_comps, options.push_constants and l.pred not in group)
+        for l in rule.body_literals() if not l.negated
     ]
     neg_lits = [l for l in rule.body_literals() if l.negated]  # kept verbatim
     rec_idx = [i for i, l in enumerate(pos_lits) if l.pred in group]
@@ -186,11 +231,15 @@ def compile_rule(
         if vv:
             bound.add(vv)
     else:
-        intro = tuple((a.name, i) for i, a in enumerate(src_lit.args))
-        source = SourceEdb(src_lit.rel if hasattr(src_lit, "rel") else src_lit.pred, intro)
-        bound.update(a.name for a in src_lit.args)
+        intro = tuple((a.name, i) for i, a in enumerate(src_lit.args)
+                      if isinstance(a, Var))
+        select = tuple((i, int(a.value)) for i, a in enumerate(src_lit.args)
+                       if isinstance(a, Const))
+        source = SourceEdb(src_lit.pred, intro, select)
+        bound.update(a.name for a in src_lit.args if isinstance(a, Var))
 
     # --- order remaining positive literals greedily by shared bound vars
+    # (a constant argument also anchors a join: it probes a fixed column)
     joins: list[JoinStep] = []
     work = list(remaining)
     guard = 0
@@ -200,8 +249,11 @@ def compile_rule(
             raise PlanError(f"cannot order joins for {rule!r}")
         picked = None
         for l in work:
-            shared = [a.name for a in l.args if a.name in bound]
-            if shared:
+            anchored = any(
+                isinstance(a, Const) or (isinstance(a, Var) and a.name in bound)
+                for a in l.args
+            )
+            if anchored:
                 picked = l
                 break
         if picked is None:
@@ -210,7 +262,7 @@ def compile_rule(
             raise PlanError(f"cartesian product in {rule!r} not supported")
         work.remove(picked)
         joins.append(_make_join(picked, bound, group, pred_info, extra_comps))
-        bound.update(a.name for a in picked.args)
+        bound.update(a.name for a in picked.args if isinstance(a, Var))
 
     # --- negated literals become anti-joins (EDB / lower-stratum only).
     # Unbound/anonymous arguments project the negated relation onto the bound
@@ -287,8 +339,12 @@ def compile_rule(
 
 def _make_join(lit: Literal, bound: set[str], group: frozenset[str], pred_info,
                extra_comps: list[Comparison]) -> JoinStep:
-    shared = [(a.name, i) for i, a in enumerate(lit.args) if a.name in bound]
-    new = list((a.name, i) for i, a in enumerate(lit.args) if a.name not in bound)
+    shared = [(a.name, i) for i, a in enumerate(lit.args)
+              if isinstance(a, Var) and a.name in bound]
+    consts = [(int(a.value), i) for i, a in enumerate(lit.args)
+              if isinstance(a, Const)]
+    new = list((a.name, i) for i, a in enumerate(lit.args)
+               if isinstance(a, Var) and a.name not in bound)
     if lit.pred in group:
         info = pred_info[lit.pred]
         is_val = lambda i: info.is_agg and i == info.agg_pos
@@ -310,10 +366,11 @@ def _make_join(lit: Literal, bound: set[str], group: frozenset[str], pred_info,
             tuple(info.key_rank(i) for _, i in shared_key),
             tuple(intro),
         )
+    probes = shared + consts  # constants probe their column directly
     return EdbJoinStep(
         rel=lit.pred,
-        probe_vars=tuple(v for v, _ in shared),
-        build_cols=tuple(i for _, i in shared),
+        probe_vars=tuple(v for v, _ in probes),
+        build_cols=tuple(i for _, i in probes),
         intro=new,
     )
 
@@ -383,16 +440,137 @@ def choose_discriminating_set(program: Program, pred: str, group: frozenset[str]
 
 
 # ---------------------------------------------------------------------------
-# Whole-program planning
+# Whole-program planning: the pass pipeline
 # ---------------------------------------------------------------------------
 
 
-def plan_program(program: Program) -> ProgramPlan:
-    pcg = build_pcg(program)
-    idb = program.idb_predicates()
+def pass_normalize(program: Program, options: PlanOptions) -> Program:
+    """Dedupe rules (preserving order) and check per-predicate arity/aggregate
+    consistency — the sanity layer every later pass may assume."""
+    seen: set[str] = set()
+    rules: list[Rule] = []
+    for r in program.rules:
+        key = repr(r)
+        if key not in seen:
+            seen.add(key)
+            rules.append(r)
+    arity: dict[str, int] = {}
+    for r in rules:
+        for lit in [r.head] + r.body_literals():
+            if arity.setdefault(lit.pred, lit.arity) != lit.arity:
+                raise PlanError(
+                    f"inconsistent arity for {lit.pred}: "
+                    f"{arity[lit.pred]} vs {lit.arity} in {r!r}")
+    return Program(rules, queries=list(program.queries))
 
+
+def pass_rewrite(program: Program, options: PlanOptions) -> tuple[Program, MagicRewrite | None, str]:
+    """Demand-driven rewriting.  With a query and ``magic=True``, apply the
+    magic-sets rewrite; with ``magic=False``, restrict to the demanded strata
+    (rules transitively reachable from the query predicate)."""
+    if options.query is None:
+        return program, None, "rewrite(none)"
+    q = options.query
+    q_rules = program.rules_for(q.pred)
+    if q_rules and q_rules[0].head.arity != len(q.args):
+        raise PlanError(
+            f"query {q!r} has arity {len(q.args)} but {q.pred} has "
+            f"arity {q_rules[0].head.arity}")
+    if options.magic:
+        try:
+            mr = magic_rewrite(program, options.query)
+        except MagicError as e:
+            raise PlanError(str(e)) from e
+        return mr.program, mr, "rewrite(magic)"
+    return _demanded_strata(program, options.query.pred), None, "rewrite(demand)"
+
+
+def _demanded_strata(program: Program, pred: str) -> Program:
+    if pred not in program.idb_predicates():
+        raise PlanError(f"query predicate {pred!r} is not an IDB predicate")
+    needed, frontier = set(), [pred]
+    while frontier:
+        p = frontier.pop()
+        if p in needed:
+            continue
+        needed.add(p)
+        for r in program.rules_for(p):
+            frontier.extend(l.pred for l in r.body_literals())
+    return Program([r for r in program.rules if r.head.pred in needed],
+                   queries=list(program.queries))
+
+
+def pass_stratify(program: Program, options: PlanOptions) -> PCG:
+    return build_pcg(program)
+
+
+def compile_group(
+    program: Program,
+    scc_idb: list[str],
+    pred_info: dict[str, PredInfo],
+    pcg: PCG,
+    options: PlanOptions,
+) -> GroupPlan:
+    """Compile one SCC of the PCG into exit/recursive rule pipelines."""
+    group = frozenset(scc_idb)
+    recursive = any(pcg.is_recursive(p) for p in scc_idb)
+
+    exit_rules, rec_rules = [], []
+    prem_reports = {}
+    for pred in scc_idb:
+        if recursive:
+            rep = check_prem_structural(program, pred, group)
+            prem_reports[pred] = rep
+            if not rep.holds:
+                raise PlanError(
+                    f"aggregate on {pred} is not PreM: {rep.reasons}"
+                )
+        for rule in program.rules_for(pred):
+            if rule.is_fact():
+                continue  # materialized directly by the engine (magic seeds)
+            rec_idx = [
+                i for i, l in enumerate(
+                    [x for x in rule.body_literals() if not x.negated])
+                if l.pred in group
+            ]
+            if not rec_idx:
+                exit_rules.append(compile_rule(rule, group, pred_info, None, options))
+            else:
+                for choice in range(len(rec_idx)):  # δ-rewriting variants
+                    rec_rules.append(compile_rule(rule, group, pred_info, choice, options))
+
+    pivot, disc, cost = {}, {}, 0
+    for pred in scc_idb:
+        if recursive:
+            gps = generalized_pivot(program, pred, group)
+            pivot[pred] = gps
+            if gps:
+                disc[pred] = gps
+                cost += 0
+            else:
+                d, c = choose_discriminating_set(
+                    program, pred, group, pred_info[pred].key_arity
+                )
+                disc[pred], cost = d, cost + c
+        else:
+            pivot[pred] = None
+            disc[pred] = (0,)
+
+    return GroupPlan(
+        preds={p: pred_info[p] for p in scc_idb},
+        recursive=recursive,
+        exit_rules=exit_rules,
+        rec_rules=rec_rules,
+        pivot=pivot,
+        discriminating=disc,
+        rwa_cost=cost,
+        prem=prem_reports,
+    )
+
+
+def _pred_infos(program: Program) -> dict[str, PredInfo]:
     pred_info: dict[str, PredInfo] = {}
-    for pred in idb:
+    for pred in program.idb_predicates():
         rules = program.rules_for(pred)
         agg_specs = {(r.agg.kind, r.agg.position) for r in rules if r.agg is not None}
         if len(agg_specs) > 1:
@@ -401,64 +579,51 @@ def plan_program(program: Program) -> ProgramPlan:
         arity = rules[0].head.arity
         key_arity = arity - 1 if agg else arity
         pred_info[pred] = PredInfo(pred, key_arity, agg, agg_pos)
+    return pred_info
 
+
+def plan_program(program: Program, options: PlanOptions | None = None) -> ProgramPlan:
+    """Run the pass pipeline: normalize -> rewrite -> stratify -> compile_group."""
+    options = options or PlanOptions()
+    passes: list[str] = []
+
+    prog = pass_normalize(program, options)
+    passes.append("normalize")
+
+    prog, mr, rewrite_name = pass_rewrite(prog, options)
+    passes.append(rewrite_name)
+
+    pcg = pass_stratify(prog, options)
+    passes.append("stratify")
+
+    pred_info = _pred_infos(prog)
+    idb = prog.idb_predicates()
     groups: list[GroupPlan] = []
     for scc in pcg.sccs:  # already leaves-first (reverse topological)
         scc_idb = sorted(p for p in scc if p in idb)
-        if not scc_idb:
-            continue
-        group = frozenset(scc_idb)
-        recursive = any(pcg.is_recursive(p) for p in scc_idb)
+        if scc_idb:
+            groups.append(compile_group(prog, scc_idb, pred_info, pcg, options))
+    passes.append("compile_group")
 
-        exit_rules, rec_rules = [], []
-        prem_reports = {}
-        for pred in scc_idb:
-            if recursive:
-                rep = check_prem_structural(program, pred, group)
-                prem_reports[pred] = rep
-                if not rep.holds:
-                    raise PlanError(
-                        f"aggregate on {pred} is not PreM: {rep.reasons}"
-                    )
-            for rule in program.rules_for(pred):
-                rec_idx = [
-                    i for i, l in enumerate(
-                        [x for x in rule.body_literals() if not x.negated])
-                    if l.pred in group
-                ]
-                if not rec_idx:
-                    exit_rules.append(compile_rule(rule, group, pred_info, None))
-                else:
-                    for choice in range(len(rec_idx)):  # δ-rewriting variants
-                        rec_rules.append(compile_rule(rule, group, pred_info, choice))
+    if mr is not None:
+        query_pred, aliases, residual = mr.query_pred, mr.aliases, mr.residual_filters
+    elif options.query is not None:
+        q = options.query
+        query_pred = q.pred
+        aliases = {q.pred: q.pred}
+        residual = tuple((i, int(a.value)) for i, a in enumerate(q.args)
+                         if isinstance(a, Const))
+    else:
+        query_pred, aliases, residual = None, {}, ()
 
-        pivot, disc, cost = {}, {}, 0
-        for pred in scc_idb:
-            if recursive:
-                gps = generalized_pivot(program, pred, group)
-                pivot[pred] = gps
-                if gps:
-                    disc[pred] = gps
-                    cost += 0
-                else:
-                    d, c = choose_discriminating_set(
-                        program, pred, group, pred_info[pred].key_arity
-                    )
-                    disc[pred], cost = d, cost + c
-            else:
-                pivot[pred] = None
-                disc[pred] = (0,)
-
-        groups.append(
-            GroupPlan(
-                preds={p: pred_info[p] for p in scc_idb},
-                recursive=recursive,
-                exit_rules=exit_rules,
-                rec_rules=rec_rules,
-                pivot=pivot,
-                discriminating=disc,
-                rwa_cost=cost,
-                prem=prem_reports,
-            )
-        )
-    return ProgramPlan(program=program, pcg=pcg, groups=groups)
+    return ProgramPlan(
+        program=program,
+        pcg=pcg,
+        groups=groups,
+        rewritten=prog,
+        options=options,
+        passes=tuple(passes),
+        query_pred=query_pred,
+        aliases=aliases,
+        residual_filters=residual,
+    )

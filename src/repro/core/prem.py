@@ -34,7 +34,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
-from .ir import Arith, Comparison, Const, Literal, Program, Rule, Var
+from .ir import AggSpec, Arith, Comparison, Const, Literal, Program, Rule, Var
 
 
 @dataclasses.dataclass
@@ -75,11 +75,18 @@ def check_prem_structural(
     if kind in ("count", "sum"):
         return check_countsum_monotone(program, pred, group)
 
+    agg_position = next(r.agg.position for r in rules if r.agg is not None)
     reasons: list[str] = []
     for rule in rules:
         rec_lits = [l for l in rule.positive_literals() if l.pred in group]
         if not rec_lits:
             continue  # exit rule: PreM trivially holds (paper's r1' case)
+        if rule.agg is None:
+            # a plain rule feeding the aggregate predicate from inside the
+            # recursive group (magic rewrites produce these): it contributes
+            # the head argument at the predicate's aggregate position, so
+            # trace that column's flow under the same monotonicity rules.
+            rule = dataclasses.replace(rule, agg=AggSpec(kind, agg_position))
         ok, why = _check_rule_cost_flow(rule, rec_lits, kind, nonneg_edb_costs)
         reasons.append(f"{rule!r}: {why}")
         if not ok:

@@ -163,6 +163,22 @@ def connected_components_dense(adj: jax.Array) -> DenseResult:
     return fixpoint_dense(MIN_PLUS, prop, labels, form="vector")
 
 
+# magic-restricted single-source fast paths ----------------------------------
+# A query binding the pivot argument of a decomposable program reduces the
+# matrix fixpoint to a *vector* fixpoint seeded with the query frontier row —
+# the dense-engine counterpart of the magic-sets rewrite.
+
+
+def reachable_from_dense(adj: jax.Array, src: int, matmul=None) -> DenseResult:
+    """``?- tc(src, Y)``: one-frontier reachability, O(e) per iteration."""
+    return fixpoint_dense(BOOL, adj, adj[src], form="vector", matmul=matmul)
+
+
+def single_source_distances_dense(w: jax.Array, src: int, matmul=None) -> DenseResult:
+    """``?- spath(src, Z, D)``: single-source min-plus distances."""
+    return fixpoint_dense(MIN_PLUS, w, w[src], form="vector", matmul=matmul)
+
+
 # ---------------------------------------------------------------------------
 # Tuple PSN — Algorithm 1, faithfully
 # ---------------------------------------------------------------------------
@@ -182,7 +198,18 @@ class EdbIndex:
 
 
 def build_edb_index(rows: np.ndarray, key_cols: tuple[int, ...], schema_bits: int) -> EdbIndex:
-    rows = np.asarray(rows, np.int64).reshape((len(rows), -1))
+    rows = np.asarray(rows, np.int64)
+    if rows.ndim == 1:  # single-column relation (reshape(-1) chokes on 0 rows)
+        rows = rows[:, None]
+    if len(rows) == 0:
+        # one sentinel row keeps every downstream gather in-bounds; count=0
+        # means no probe can match it (magic-restricted strata are often empty)
+        pad = np.zeros((1, rows.shape[1] if rows.size or rows.ndim > 1 else 1), np.int64)
+        return EdbIndex(
+            keys=jnp.full((1,), np.iinfo(np.int64).max, jnp.int64),
+            count=jnp.asarray(0, jnp.int32),
+            cols=tuple(jnp.asarray(pad[:, i], jnp.int32) for i in range(pad.shape[1])),
+        )
     key_schema = Schema(tuple([schema_bits] * len(key_cols)))
     keys = np.zeros((len(rows),), np.int64)
     for c, shift in zip(key_cols, key_schema.shifts):
@@ -205,9 +232,17 @@ class Bindings:
 
 
 def join_edb(b: Bindings, index: EdbIndex, probe_vars, build_key_cols, intro, schema_bits, out_cap) -> Bindings:
-    """Join the binding table against an EDB index; introduce new columns."""
+    """Join the binding table against an EDB index; introduce new columns.
+
+    ``probe_vars`` entries are binding-column names or int constants — the
+    planner pushes query/rule constants down to constant probes here instead
+    of post-filtering the joined result.
+    """
     key_schema = Schema(tuple([schema_bits] * len(probe_vars)))
-    probe = key_schema.pack([b.cols[v] for v in probe_vars])
+    shape = b.valid.shape
+    pcols = [b.cols[v] if isinstance(v, str) else jnp.full(shape, v, jnp.int32)
+             for v in probe_vars]
+    probe = key_schema.pack(pcols)
     probe = jnp.where(b.valid, probe, EMPTY)
     pi, bi, valid, ovf = expand_join(probe, b.valid, index.keys, index.count, out_cap)
     cols = {v: c[pi] for v, c in b.cols.items()}

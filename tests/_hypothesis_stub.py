@@ -1,0 +1,61 @@
+"""Fallback shims so the suite collects (and non-property tests run) when
+`hypothesis` is absent.
+
+Usage in test modules::
+
+    from _hypothesis_stub import given, settings, st
+
+When hypothesis is installed these are the real objects; otherwise the
+strategy combinators become inert placeholders and ``@given`` turns the test
+into a zero-argument skip (the moral equivalent of ``pytest.importorskip``
+applied per-test instead of per-module, so plain tests in the same file keep
+running).
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """Inert stand-in supporting the combinator surface the suite uses."""
+
+        def map(self, fn):
+            return self
+
+        def filter(self, fn):
+            return self
+
+        def flatmap(self, fn):
+            return self
+
+    class _St:
+        def __getattr__(self, name):
+            def make(*args, **kwargs):
+                return _Strategy()
+
+            return make
+
+    st = _St()
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            # No wraps(): pytest must see a zero-arg function, not the
+            # strategy-typed signature of the wrapped property test.
+            def skipper():
+                pytest.skip("hypothesis not installed (see requirements-dev.txt)")
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+
+        return deco
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+
+        return deco

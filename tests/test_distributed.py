@@ -2,12 +2,18 @@
 
 These need >1 jax device, but the suite must see exactly 1 (dry-run rule), so
 each test runs a small script in a subprocess with
-``--xla_force_host_platform_device_count=4``.
+``--xla_force_host_platform_device_count=4``.  Each subprocess pays the full
+multi-device compile bill (minutes), so the module is slow-marked and runs
+via ``pytest -m slow``.
 """
 import subprocess
 import sys
 import textwrap
 from pathlib import Path
+
+import pytest
+
+pytestmark = pytest.mark.slow
 
 SRC = Path(__file__).resolve().parents[1] / "src"
 
@@ -30,8 +36,11 @@ import repro
 from repro.core import distributed as D
 from repro.core.seminaive import (transitive_closure_dense,
                                   same_generation_dense, shortest_paths_dense)
-mesh = jax.make_mesh((4,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+try:  # axis_types only exists on newer jax
+    mesh = jax.make_mesh((4,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+except AttributeError:
+    mesh = jax.make_mesh((4,), ("data",))
 rng = np.random.default_rng(0)
 n = 16
 adj = jnp.asarray(rng.random((n, n)) < 0.15)

@@ -1,7 +1,7 @@
 """End-to-end Datalog engine tests: every §2-§4 example vs brute-force oracles."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_stub import given, settings, st
 
 from repro.core.engine import CapacityError, Engine
 

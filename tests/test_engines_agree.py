@@ -7,7 +7,7 @@ The same Datalog query evaluated by (i) the faithful Algorithm-1 tuple engine,
 """
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_stub import given, settings, st
 
 from repro.core.engine import Engine
 from repro.core.seminaive import (connected_components_dense,

@@ -1,0 +1,378 @@
+"""Query-driven evaluation: adornment, magic-sets rewrite, Engine.ask.
+
+Equivalence bar: ``Engine.ask(q)`` must return exactly the full perfect model
+restricted to the query constants — computed bottom-up on the magic-rewritten
+program, with strictly less generated work on demand-selective queries.
+"""
+import numpy as np
+import pytest
+
+from repro.core.engine import Engine, as_query_literal
+from repro.core.ir import Const, Literal, Var
+from repro.core.magic import (MagicError, adorned_name, detect_frontier_lowering,
+                              magic_name, query_adornment, rewrite)
+from repro.core.parser import parse_program, parse_query
+from repro.core.planner import PlanError, PlanOptions, plan_program
+
+TC = """
+tc(X,Y) <- arc(X,Y).
+tc(X,Y) <- tc(X,Z), arc(Z,Y).
+"""
+
+SG = """
+sg(X,Y) <- arc(P,X), arc(P,Y), X != Y.
+sg(X,Y) <- arc(A,X), sg(A,B), arc(B,Y).
+"""
+
+SPATH = """
+dpath(X,Z,min<D>) <- darc(X,Z,D).
+dpath(X,Z,min<D>) <- dpath(X,Y,Dxy), darc(Y,Z,Dyz), D = Dxy + Dyz.
+spath(X,Z,D) <- dpath(X,Z,D).
+"""
+
+
+# ---------------------------------------------------------------------------
+# parser: query goals
+# ---------------------------------------------------------------------------
+
+
+def test_parse_query_goal_in_program():
+    p = parse_program(TC + "?- tc(1, X).")
+    assert len(p.queries) == 1
+    q = p.queries[0]
+    assert q.pred == "tc" and q.args[0] == Const(1) and isinstance(q.args[1], Var)
+
+
+def test_parse_query_standalone_forms():
+    q = parse_query("tc(1, X)")
+    assert q.pred == "tc" and q.args[0] == Const(1)
+    q2 = parse_query("?- tc(X, 5).")
+    assert isinstance(q2.args[0], Var) and q2.args[1] == Const(5)
+    q3 = as_query_literal(("tc", (1, None)))
+    assert q3.args[0] == Const(1) and isinstance(q3.args[1], Var)
+
+
+# ---------------------------------------------------------------------------
+# adornment + rewrite structure
+# ---------------------------------------------------------------------------
+
+
+def test_adornment_patterns():
+    assert query_adornment(parse_query("tc(1, X)")) == "bf"
+    assert query_adornment(parse_query("tc(X, 5)")) == "fb"
+    assert query_adornment(parse_query("tc(1, 5)")) == "bb"
+    # aggregate value positions never bind
+    assert query_adornment(parse_query("dpath(1, X, 7)"), agg_pos=2) == "bff"
+
+
+def test_magic_rewrite_tc_shape():
+    mr = rewrite(parse_program(TC), parse_query("tc(1, X)"))
+    preds = {r.head.pred for r in mr.program.rules}
+    assert preds == {magic_name("tc", "bf"), adorned_name("tc", "bf")}
+    seeds = [r for r in mr.program.rules if r.is_fact()]
+    assert len(seeds) == 1 and seeds[0].head.args == (Const(1),)
+    # every adorned rule is magic-guarded
+    for r in mr.program.rules_for(adorned_name("tc", "bf")):
+        assert r.body[0].pred == magic_name("tc", "bf")
+    assert mr.query_pred == "tc__bf"
+
+
+def test_magic_rewrite_sg_generates_recursive_magic():
+    """Left-to-right SIPS: sg's up-edge ancestors become the magic set."""
+    mr = rewrite(parse_program(SG), parse_query("sg(2, Y)"))
+    m = magic_name("sg", "bf")
+    m_rules = [r for r in mr.program.rules_for(m) if not r.is_fact()]
+    assert len(m_rules) == 1
+    (rule,) = m_rules
+    body_preds = [l.pred for l in rule.body_literals()]
+    assert body_preds == [m, "arc"]  # m__sg__bf(A) <- m__sg__bf(X), arc(A,X)
+
+
+def test_magic_rejects_edb_query():
+    with pytest.raises(MagicError):
+        rewrite(parse_program(TC), parse_query("arc(1, X)"))
+
+
+def test_plan_pipeline_records_passes():
+    plan = plan_program(parse_program(TC))
+    assert plan.passes == ("normalize", "rewrite(none)", "stratify", "compile_group")
+    plan_q = plan_program(parse_program(TC),
+                          PlanOptions(query=parse_query("tc(1, X)")))
+    assert "rewrite(magic)" in plan_q.passes
+    assert plan_q.query_pred == "tc__bf"
+    plan_d = plan_program(parse_program(TC),
+                          PlanOptions(query=parse_query("tc(1, X)"), magic=False))
+    assert "rewrite(demand)" in plan_d.passes
+
+
+def test_constant_pushdown_into_source():
+    """Constants compile into SourceEdb selections, not post-filters."""
+    from repro.core.planner import SourceEdb
+    plan = plan_program(parse_program("p(Y) <- arc(1, Y)."))
+    (gp,) = [g for g in plan.groups if "p" in g.preds]
+    (cr,) = gp.exit_rules
+    assert isinstance(cr.source, SourceEdb)
+    assert cr.source.select == ((0, 1),)
+    assert cr.comps == ()
+
+
+# ---------------------------------------------------------------------------
+# oracles
+# ---------------------------------------------------------------------------
+
+
+def _tc_oracle(edges):
+    adj = set(map(tuple, edges))
+    out = set(adj)
+    changed = True
+    while changed:
+        changed = False
+        for (x, z) in list(out):
+            for (z2, y) in adj:
+                if z2 == z and (x, y) not in out:
+                    out.add((x, y))
+                    changed = True
+    return out
+
+
+def _paths_graph(n_paths=2000, length=5):
+    """Disjoint paths: >= 10k edges, bounded TC, strong demand selectivity."""
+    edges = []
+    v = 0
+    for _ in range(n_paths):
+        for _ in range(length):
+            edges.append((v, v + 1))
+            v += 1
+        v += 1
+    return np.asarray(edges, np.int64)
+
+
+# ---------------------------------------------------------------------------
+# equivalence: ask == filtered full model
+# ---------------------------------------------------------------------------
+
+
+def test_ask_tc_equals_filtered_full_model():
+    edges = np.array([[0, 1], [1, 2], [2, 3], [3, 1], [4, 0], [5, 6]])
+    eng = Engine(TC, db={"arc": edges}, default_cap=4096).run()
+    want = {t for t in _tc_oracle(edges) if t[0] == 1}
+    rows = eng.ask("tc", (1, None), verify=True)
+    assert {tuple(map(int, r)) for r in rows} == want
+
+
+def test_ask_tc_bound_second_arg_non_decomposable():
+    """tc(X, 5): adornment fb forces an all-free sub-evaluation, but the
+    result must still exactly match the filtered full model."""
+    edges = np.array([[0, 1], [1, 2], [2, 3], [3, 1], [4, 0], [5, 6], [2, 5]])
+    eng = Engine(TC, db={"arc": edges}, default_cap=4096)
+    rows = eng.ask("tc", (None, 5), verify=True)
+    want = {t for t in _tc_oracle(edges) if t[1] == 5}
+    assert {tuple(map(int, r)) for r in rows} == want
+
+
+def test_ask_tc_fully_bound():
+    edges = np.array([[0, 1], [1, 2], [5, 6]])
+    eng = Engine(TC, db={"arc": edges}, default_cap=4096)
+    assert [tuple(map(int, r)) for r in eng.ask("tc", (0, 2), verify=True)] == [(0, 2)]
+    assert len(eng.ask("tc", (0, 6), verify=True)) == 0
+
+
+def test_ask_sg_equals_filtered_full_model():
+    arc = np.array([[0, 2], [0, 3], [1, 4], [1, 5], [2, 6], [3, 7], [4, 8]])
+    eng = Engine(SG, db={"arc": arc}, default_cap=8192).run()
+    full = {tuple(map(int, r)) for r in eng.query("sg")}
+    rows = eng.ask("sg", (2, None), verify=True)
+    assert {tuple(map(int, r)) for r in rows} == {t for t in full if t[0] == 2}
+
+
+def test_ask_spath_single_source_min_agg():
+    darc = np.array([[0, 1, 4], [0, 2, 1], [2, 1, 1], [1, 3, 2], [3, 0, 7],
+                     [2, 3, 9], [5, 6, 2]])
+    eng = Engine(SPATH, db={"darc": darc}, default_cap=4096).run()
+    frows, fvals = eng.query_agg("dpath")
+    want = {(int(r[0]), int(r[1])): int(v) for r, v in zip(frows, fvals) if r[0] == 0}
+    rows, vals = eng.ask("dpath", (0, None, None), verify=True)
+    assert {(int(r[0]), int(r[1])): int(v) for r, v in zip(rows, vals)} == want
+    # spath (plain projection of the aggregate) restricted the same way
+    srows = eng.ask("spath", (0, None, None), verify=True)
+    assert {(int(a), int(b)): int(d) for a, b, d in srows} == want
+
+
+def test_ask_mutual_recursion():
+    base = np.array([[0, 1], [1, 2], [2, 3], [7, 8]])
+    prog = """
+    even(X,Y) <- e(X,Y).
+    even(X,Y) <- odd(X,Z), e(Z,Y).
+    odd(X,Y) <- even(X,Z), e(Z,Y).
+    """
+    eng = Engine(prog, db={"e": base}, default_cap=2048)
+    assert {tuple(map(int, r)) for r in eng.ask("odd", (0, None), verify=True)} == {(0, 2)}
+
+
+def test_ask_count_aggregate_cascade():
+    friend = np.array([[1, 0], [2, 0], [1, 2], [2, 1], [3, 1], [3, 2], [4, 3],
+                       [4, 1], [5, 4], [5, 3]])
+    organizer = np.array([[0], [2]])
+    prog = """
+    attend(X) <- organizer(X).
+    attend(X) <- cntfriends(X,N), N >= 2.
+    cntfriends(Y, count<X>) <- attend(X), friend(Y,X).
+    """
+    eng = Engine(prog, db={"friend": friend, "organizer": organizer},
+                 default_cap=4096)
+    assert {tuple(map(int, r)) for r in eng.ask("attend", (1,), verify=True)} == {(1,)}
+    # 5 attends through the full cascade (friends 4 and 3 both end up going)
+    assert {tuple(map(int, r)) for r in eng.ask("attend", (5,), verify=True)} == {(5,)}
+    # 9 appears nowhere in the friend graph
+    assert len(eng.ask("attend", (9,), verify=True)) == 0
+
+
+def test_ask_guards_facts_against_query_bounds():
+    """A tc fact outside the demanded set must not leak into the answer."""
+    prog = """
+    tc(5,6).
+    tc(X,Y) <- arc(X,Y).
+    tc(X,Y) <- tc(X,Z), arc(Z,Y).
+    """
+    eng = Engine(prog, db={"arc": np.array([[0, 1], [1, 2]])}, default_cap=1024)
+    assert {tuple(map(int, r)) for r in eng.ask("tc", (1, None), verify=True)} \
+        == {(1, 2)}
+    assert {tuple(map(int, r)) for r in eng.ask("tc", (5, None), verify=True)} \
+        == {(5, 6)}
+
+
+def test_ask_binding_equality_in_magic_prefix():
+    """X = 1 binds X for the SIPS; the magic rule body must carry it."""
+    prog = """
+    p(Y) <- X = 1, q(X, Y).
+    q(A,B) <- arc(A,B).
+    q(A,B) <- q(A,C), arc(C,B).
+    """
+    eng = Engine(prog, db={"arc": np.array([[1, 2], [2, 3], [7, 8]])},
+                 default_cap=1024)
+    assert {int(r[0]) for r in eng.ask("p", (2,), verify=True)} == {2}
+    assert len(eng.ask("p", (8,), verify=True)) == 0  # 8 only reachable from 7
+
+
+def test_multiple_query_goals_rejected():
+    with pytest.raises(ValueError):
+        Engine(TC + "?- tc(1,X).\n?- tc(2,X).",
+               db={"arc": np.array([[1, 2]])})
+
+
+def test_ask_on_empty_edb():
+    eng = Engine(TC, db={"arc": np.zeros((0, 2), np.int64)}, default_cap=64)
+    assert len(eng.ask("tc", (1, None), verify=True)) == 0
+    assert len(eng.ask_dense("tc", (1, None))) == 0
+
+
+def test_query_constants_validated_against_domain():
+    eng = Engine(TC, db={"arc": np.array([[0, 1]])}, default_cap=64)
+    with pytest.raises(ValueError):
+        eng.ask("tc", (1 << 40, None))  # would silently truncate when packed
+    with pytest.raises(PlanError):
+        eng.ask("tc", (1,))  # wrong arity
+
+
+def test_ask_kcores_falls_back_when_magic_breaks_prem():
+    """SIPS through the degree/validArc/connComp clique creates an
+    aggregate-through-magic cycle PreM rejects; ask() must fall back to the
+    demanded-strata plan and still return the exact restricted answer."""
+    arc = np.array([[a, b] for a in range(4) for b in range(4) if a != b]
+                   + [[0, 4], [4, 0]])
+    eng = Engine("""
+    degree(X, count<Y>) <- arc(X,Y).
+    validArc(X,Y) <- arc(X,Y), degree(X,D1), D1 >= 3, degree(Y,D2), D2 >= 3.
+    connComp(A,A) <- validArc(A,B).
+    connComp(C,min<B>) <- connComp(A,B), validArc(A,C).
+    kCores(A,B) <- connComp(A,B).
+    """, db={"arc": arc}, default_cap=4096)
+    rows, vals = eng.ask("connComp", (2, None), verify=True)
+    assert [(int(r[0]), int(v)) for r, v in zip(rows, vals)] == [(2, 0)]
+    rows = eng.ask("kCores", (4, None), verify=True)
+    assert len(rows) == 0  # vertex 4 is outside the 3-core
+
+
+def test_query_goal_in_program_text():
+    edges = np.array([[0, 1], [1, 2], [2, 3], [5, 6]])
+    eng = Engine(TC + "?- tc(0, X).", db={"arc": edges}, default_cap=4096).run()
+    got = {tuple(map(int, r)) for r in eng.query("tc")}
+    assert got == {(0, 1), (0, 2), (0, 3)}
+    assert eng.plan.query_pred == "tc__bf"
+
+
+def test_ask_edb_is_selection():
+    edges = np.array([[0, 1], [0, 2], [1, 2]])
+    eng = Engine(TC, db={"arc": edges}, default_cap=1024)
+    assert {tuple(map(int, r)) for r in eng.ask("arc", (0, None))} == {(0, 1), (0, 2)}
+
+
+# ---------------------------------------------------------------------------
+# acceptance: pruning on a >= 10k-edge graph (generated strictly lower)
+# ---------------------------------------------------------------------------
+
+
+def test_ask_prunes_work_on_10k_edge_graph():
+    edges = _paths_graph(2000, 5)
+    assert len(edges) >= 10_000
+    src = int(edges[0, 0])
+    full = Engine(TC, db={"arc": edges}, default_cap=1 << 17,
+                  join_cap=1 << 17, bits=18).run()
+    tc_full = full.query("tc")
+    want = {tuple(map(int, r)) for r in tc_full if int(r[0]) == src}
+    rows = full.ask("tc", (src, None))
+    assert {tuple(map(int, r)) for r in rows} == want
+    # the rewrite prunes generated (pre-dedup) facts, not post-filters them
+    assert full.stats["tc__bf"].generated < full.stats["tc"].generated
+    assert full.stats["tc__bf"].generated <= 4 * len(want) + 8
+
+
+# ---------------------------------------------------------------------------
+# dense / distributed frontier fast paths
+# ---------------------------------------------------------------------------
+
+
+def test_detect_frontier_lowering():
+    assert detect_frontier_lowering(parse_program(TC), "tc").kind == "bool"
+    assert detect_frontier_lowering(parse_program(SPATH), "dpath").kind == "minplus"
+    assert detect_frontier_lowering(parse_program(SG), "sg") is None
+
+
+def test_ask_dense_matches_tuple_path():
+    edges = np.array([[0, 1], [1, 2], [2, 3], [3, 1], [4, 0], [5, 6]])
+    eng = Engine(TC, db={"arc": edges}, default_cap=4096)
+    tuple_rows = {tuple(map(int, r)) for r in eng.ask("tc", (1, None))}
+    dense_rows = {tuple(map(int, r)) for r in eng.ask_dense("tc", (1, None))}
+    assert dense_rows == tuple_rows
+
+    darc = np.array([[0, 1, 4], [0, 2, 1], [2, 1, 1], [1, 3, 2], [3, 0, 7]])
+    e2 = Engine(SPATH, db={"darc": darc}, default_cap=4096)
+    trows, tvals = e2.ask("dpath", (0, None, None))
+    drows, dvals = e2.ask_dense("dpath", (0, None, None))
+    assert {(int(r[0]), int(r[1]), int(v)) for r, v in zip(trows, tvals)} == \
+        {(int(r[0]), int(r[1]), int(v)) for r, v in zip(drows, dvals)}
+
+
+def test_ask_dense_rejects_non_decomposable():
+    arc = np.array([[0, 2], [0, 3]])
+    eng = Engine(SG, db={"arc": arc}, default_cap=1024)
+    with pytest.raises(PlanError):
+        eng.ask_dense("sg", (0, None))
+    e2 = Engine(TC, db={"arc": arc}, default_cap=1024)
+    with pytest.raises(PlanError):
+        e2.ask_dense("tc", (None, 2))  # pivot not bound
+
+
+def test_tc_frontier_decomposable_single_device():
+    import jax
+    from repro.core.distributed import tc_frontier_decomposable
+    mesh = jax.make_mesh((1,), ("data",))
+    edges = np.array([[0, 1], [1, 2], [2, 3], [3, 1], [4, 0]])
+    n = 5
+    adj = np.zeros((n, n), bool)
+    adj[edges[:, 0], edges[:, 1]] = True
+    import jax.numpy as jnp
+    frontier = jnp.asarray(adj[np.array([1])])
+    closed, iters = tc_frontier_decomposable(mesh, jnp.asarray(adj), frontier)
+    got = {(1, int(j)) for j in np.nonzero(np.asarray(closed)[0])[0]}
+    assert got == {t for t in _tc_oracle(edges) if t[0] == 1}

@@ -22,6 +22,7 @@ def test_datalog_to_answer_pipeline():
     assert len(eng.query("tc")) == tc_size_oracle(edges)
 
 
+@pytest.mark.slow
 def test_table6_families_tc_counts():
     """Scaled Table 6 graphs: engine counts == oracle counts."""
     for name, edges in table6_scaled().items():
