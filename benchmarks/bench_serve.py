@@ -1,0 +1,179 @@
+"""Serving throughput: micro-batched fixpoints + caches vs per-query ask().
+
+Workload: single-source TC queries against a >= 10k-edge random digraph
+(the paper's Gn-p family at serving-friendly density).  Three regimes:
+
+  * ``sequential``  — one ``Engine.ask()`` per query: the PR-1 interface;
+    re-plans per query, solo tuple fixpoint (compiles amortize through the
+    engine's runner cache after the first query).
+  * ``service``     — ``DatalogService.ask_batch`` at B = 1 / 32 / 256:
+    *cold* (first contact: compile + plan), *steady* (compile-warm, result
+    cache cold — the honest serving number), and *warm* (result-cache hits).
+  * ``append``      — appending edges to a warm service (resume cached
+    closures from the delta frontier) vs recomputing those closures from
+    scratch on an equally compile-warm service.
+
+Acceptance (ISSUE 2): steady-state B=32 serving >= 5x sequential
+``Engine.ask`` qps; append-resume beats recompute.
+
+Usage:  PYTHONPATH=src python benchmarks/bench_serve.py [--smoke] [--out F]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.engine import Engine
+from repro.data.graphs import gnp_graph
+from repro.service import DatalogService
+
+TC = """
+tc(X,Y) <- arc(X,Y).
+tc(X,Y) <- tc(X,Z), arc(Z,Y).
+"""
+
+
+def _wall(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0
+
+
+def rows_set(rows):
+    return {tuple(map(int, r)) for r in rows}
+
+
+def bench(smoke: bool) -> dict:
+    if smoke:
+        n, p, n_queries, n_append = 128, 0.05, 8, 16
+    else:
+        n, p, n_queries, n_append = 1024, 0.01, 256, 64
+    edges = gnp_graph(n, p, seed=11)
+    rng = np.random.default_rng(5)
+    sources = rng.choice(n, size=n_queries, replace=False).tolist()
+    rec: dict = {"graph": f"G{n}-p{p}", "edges": int(len(edges)),
+                 "queries": n_queries, "smoke": smoke}
+    print(f"{rec['graph']}: {rec['edges']} edges, {n_queries} query sources",
+          flush=True)
+    if not smoke:
+        assert len(edges) >= 10_000, "acceptance wants a >= 10k-edge workload"
+
+    ask_caps = dict(default_cap=1 << 12 if smoke else 1 << 13,
+                    join_cap=1 << 13 if smoke else 1 << 15)
+
+    # --- sequential Engine.ask ------------------------------------------------
+    seq_n = min(32, n_queries)
+    eng = Engine(TC, db={"arc": edges}, **ask_caps)
+    _, t_first = _wall(lambda: eng.ask("tc", (sources[0], None)))
+    _, t_seq = _wall(lambda: [eng.ask("tc", (s, None))
+                              for s in sources[1:seq_n]])
+    rec["sequential"] = {
+        "queries": seq_n - 1,
+        "first_query_seconds": t_first,  # includes the one-off compile
+        "seconds": t_seq,
+        "qps": (seq_n - 1) / t_seq,
+    }
+    print(f"  sequential ask: first {t_first:.3f}s, then "
+          f"{rec['sequential']['qps']:.1f} qps", flush=True)
+
+    # --- service at batch sizes ----------------------------------------------
+    rec["service"] = []
+    for b in (1, 32, 256):
+        if b > n_queries:
+            continue
+        svc = DatalogService(TC, db={"arc": edges}, **ask_caps)
+        cold_q = [("tc", (s, None)) for s in sources[:b]]
+        cold_res, t_cold = _wall(lambda: svc.ask_batch(cold_q))
+        # steady state: compile-warm service, result-cache-cold sources
+        if 2 * b <= n_queries:
+            steady_q = [("tc", (s, None)) for s in sources[b:2 * b]]
+            _, t_steady = _wall(lambda: svc.ask_batch(steady_q))
+        else:  # not enough distinct sources: re-measure on a cleared cache
+            # (the batched fixpoint shape is compile-warm from the cold run)
+            svc.cache.clear()
+            _, t_steady = _wall(lambda: svc.ask_batch(cold_q))
+        _, t_warm = _wall(lambda: svc.ask_batch(cold_q))  # pure cache hits
+        rec["service"].append({
+            "batch": b,
+            "cold_seconds": t_cold, "cold_qps": b / t_cold,
+            "steady_seconds": t_steady, "steady_qps": b / t_steady,
+            "warm_seconds": t_warm, "warm_qps": b / t_warm,
+        })
+        print(f"  service B={b:3d}: cold {b / t_cold:8.1f} qps, "
+              f"steady {b / t_steady:8.1f} qps, warm {b / t_warm:8.1f} qps",
+              flush=True)
+        # spot-check against the sequential path
+        assert rows_set(cold_res[0]) == rows_set(
+            eng.ask("tc", (sources[0], None)))
+
+    b32 = next((s for s in rec["service"] if s["batch"] == 32), None)
+    if b32 is not None:
+        rec["speedup_b32_vs_sequential"] = \
+            b32["steady_qps"] / rec["sequential"]["qps"]
+        print(f"  B=32 steady vs sequential: "
+              f"{rec['speedup_b32_vs_sequential']:.1f}x", flush=True)
+
+    # --- append-resume vs recompute ------------------------------------------
+    nb = min(32, n_queries)
+    warmup_edges = np.stack([rng.integers(0, n, n_append),
+                             rng.integers(0, n, n_append)], axis=1)
+    new_edges = np.stack([rng.integers(0, n, n_append),
+                          rng.integers(0, n, n_append)], axis=1)
+    warm = DatalogService(TC, db={"arc": edges}, **ask_caps)
+    warm.ask_batch([("tc", (s, None)) for s in sources[:nb]])  # populate cache
+    # appends recur in a serving session: the first one pays the one-off
+    # scatter/gather compiles; measure the steady state.  End-to-end cost of
+    # an append = maintenance (resume cached closures) + re-serving the hot
+    # sources from the refreshed cache.
+    _, t_first_append = _wall(lambda: warm.append("arc", warmup_edges))
+    _, t_resume = _wall(lambda: warm.append("arc", new_edges))
+    resumed_res, t_reserve = _wall(
+        lambda: warm.ask_batch([("tc", (s, None)) for s in sources[:nb]]))
+
+    appended = np.concatenate([edges, warmup_edges, new_edges])
+    cold = DatalogService(TC, db={"arc": appended}, **ask_caps)
+    cold.ask_batch([("tc", (s, None)) for s in sources[nb:nb + nb]]
+                   if 2 * nb <= n_queries else
+                   [("tc", (sources[-1], None))])  # compile-warm
+    cold.cache.clear()
+    recompute_res, t_recompute = _wall(
+        lambda: cold.ask_batch([("tc", (s, None)) for s in sources[:nb]]))
+    # the resumed cache must agree with the from-scratch recompute
+    for s, res, want in zip(sources[:nb], resumed_res, recompute_res):
+        assert rows_set(res) == rows_set(want), s
+    rec["append"] = {
+        "appended_edges": int(n_append),
+        "cached_sources": nb,
+        "first_append_seconds": t_first_append,  # one-off compiles included
+        "resume_seconds": t_resume,  # maintenance: delta-frontier fixpoint
+        "reserve_seconds": t_reserve,  # serving the burst from refreshed cache
+        "recompute_seconds": t_recompute,  # cacheless: burst from scratch
+        "speedup": t_recompute / (t_resume + t_reserve),
+    }
+    print(f"  append: resume {t_resume:.3f}s + serve {t_reserve:.3f}s vs "
+          f"recompute {t_recompute:.3f}s ({rec['append']['speedup']:.1f}x)",
+          flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny instance for CI; does not write the JSON")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    rec = bench(args.smoke)
+    if args.smoke and args.out is None:
+        print(json.dumps(rec, indent=2))
+        return
+    out = Path(args.out) if args.out else Path(__file__).parent / "BENCH_serve.json"
+    out.write_text(json.dumps(rec, indent=2))
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

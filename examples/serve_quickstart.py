@@ -1,0 +1,64 @@
+"""Serving quickstart: a resident Datalog session in five minutes.
+
+Walks the `repro.service` subsystem end to end:
+  * start a ``DatalogService`` (program + EDB load once)
+  * a cold query, then a warm-cache query burst (one micro-batched fixpoint)
+  * an incremental EDB append that *resumes* cached closures
+  * service introspection (``explain()``)
+
+Usage:  PYTHONPATH=src python examples/serve_quickstart.py
+"""
+import time
+
+import numpy as np
+
+from repro.data.graphs import gnp_graph
+from repro.service import DatalogService
+
+TC = """
+tc(X,Y) <- arc(X,Y).
+tc(X,Y) <- tc(X,Z), arc(Z,Y).
+"""
+
+edges = gnp_graph(256, 0.02, seed=7)
+svc = DatalogService(TC, db={"arc": edges}, default_cap=1 << 13)
+print(f"service up: {len(edges)} arcs loaded")
+
+# ---------------------------------------------------------------- cold query
+t0 = time.perf_counter()
+rows = svc.ask("tc", (3, None))
+print(f"cold  tc(3, X): {len(rows)} rows in {time.perf_counter() - t0:.3f}s "
+      "(magic rewrite + plan + compile)")
+
+# -------------------------------------------------- warm burst, micro-batched
+# 32 single-source queries coalesce into ONE batched dense fixpoint: the
+# frontier is a (32, n) matrix, each iteration a single semiring matmul.
+burst = [("tc", (s, None)) for s in range(32)]
+t0 = time.perf_counter()
+answers = svc.ask_batch(burst)
+dt = time.perf_counter() - t0
+print(f"burst of {len(burst)}: {dt:.3f}s total, "
+      f"{len(burst) / dt:.0f} queries/sec "
+      f"({svc.stats.dense_fixpoints} fixpoints run)")
+
+# repeat burst: pure result-cache hits
+t0 = time.perf_counter()
+svc.ask_batch(burst)
+dt = time.perf_counter() - t0
+print(f"repeat burst: {dt * 1e3:.1f}ms ({svc.cache.hits} cache hits)")
+
+# ------------------------------------------------------- incremental append
+# monotone EDB appends resume the cached fixpoints from the new-fact delta
+# frontier — the 32 cached closures refresh without recomputation, and the
+# post-append burst is served from cache again.
+before = len(svc.ask("tc", (3, None)))
+t0 = time.perf_counter()
+svc.append("arc", [[3, 300], [300, 301]])  # fresh vertices: domain grows too
+print(f"append of 2 arcs: {time.perf_counter() - t0:.3f}s "
+      f"({svc.stats.resumed_rows} cached closures resumed)")
+after = len(svc.ask("tc", (3, None)))
+print(f"tc(3, X): {before} rows -> {after} rows (served from refreshed cache)")
+
+print("\nservice state:")
+for k, v in svc.explain().items():
+    print(f"  {k}: {v}")

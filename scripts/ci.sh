@@ -15,6 +15,8 @@ MODULES = [
     "repro.core.planner", "repro.core.ir", "repro.core.stratify",
     "repro.core.prem", "repro.core.relation", "repro.core.seminaive",
     "repro.core.semiring", "repro.core.distributed",
+    "repro.service", "repro.service.session", "repro.service.batch",
+    "repro.service.incremental", "repro.service.cache", "repro.service.serve",
     "repro.kernels", "repro.data.graphs",
 ]
 for m in MODULES:
@@ -24,3 +26,6 @@ EOF
 
 echo "== fast test tier =="
 python -m pytest -q
+
+echo "== serving smoke bench =="
+python benchmarks/bench_serve.py --smoke

@@ -122,6 +122,23 @@ def tc_frontier_decomposable(mesh, adj: jax.Array, frontier: jax.Array,
     return closed[:k], iters
 
 
+def resume_frontier_decomposable(mesh, adj: jax.Array, prev: jax.Array,
+                                 seed: jax.Array, axis: str = "data",
+                                 sr: Semiring = BOOL, matmul=None,
+                                 max_iters: int | None = None):
+    """Resume a sharded frontier fixpoint after a monotone EDB append.
+
+    The state is monotone (SetRDD argument), so restarting the Fig.-4 loop
+    from ``prev ⊕ seed`` — the previously closed frontier rows joined with
+    the post-append seed rows for the same sources — converges to the new
+    closure over the appended ``adj`` in as many iterations as the *delta*
+    needs, not the full recursion depth.  This is the distributed twin of the
+    serving layer's ``repro.service.incremental`` path.
+    """
+    return tc_frontier_decomposable(mesh, adj, sr.add(prev, seed), axis, sr,
+                                    matmul, max_iters)
+
+
 # ---------------------------------------------------------------------------
 # SG: sandwich plan with one all-reduce per iteration
 # ---------------------------------------------------------------------------

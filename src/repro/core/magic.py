@@ -69,6 +69,10 @@ class MagicRewrite:
     #: (position, constant) pairs the adornment could not bind (aggregate
     #: value positions); callers post-filter results on these.
     residual_filters: tuple[tuple[int, int], ...] = ()
+    #: the top magic seed fact carrying the query constants (None when the
+    #: query binds nothing).  The serving layer swaps this single rule for a
+    #: seed-EDB rule so one rewrite/plan serves every query of the adornment.
+    seed_rule: "Rule | None" = None
 
 
 def _agg_positions(program: Program) -> dict[str, int]:
@@ -172,9 +176,11 @@ def rewrite(program: Program, query: Literal) -> MagicRewrite:
         out_rules.append(rule)
 
     # seed: the query's constants populate the top magic predicate
+    seed_rule: Rule | None = None
     if BOUND in q_adn:
         seed_args = tuple(a for i, a in enumerate(query.args) if q_adn[i] == BOUND)
-        out_rules.append(Rule(Literal(magic_name(query.pred, q_adn), seed_args), ()))
+        seed_rule = Rule(Literal(magic_name(query.pred, q_adn), seed_args), ())
+        out_rules.append(seed_rule)
         aliases[magic_name(query.pred, q_adn)] = query.pred
 
     while worklist:
@@ -265,6 +271,7 @@ def rewrite(program: Program, query: Literal) -> MagicRewrite:
         adornment=q_adn,
         aliases=aliases,
         residual_filters=residual,
+        seed_rule=seed_rule,
     )
 
 
@@ -272,6 +279,23 @@ def rewrite(program: Program, query: Literal) -> MagicRewrite:
 # Frontier lowering: magic-restricted decomposable programs -> dense vector
 # fixpoints (tc_decomposable / form="vector" seeded with the query frontier).
 # ---------------------------------------------------------------------------
+
+
+def frontier_query_source(q: Literal) -> int | None:
+    """The bound pivot of a canonical single-source query, or None.
+
+    A query admits the dense frontier plan only when the pivot (first)
+    argument is a constant and the tail is all *distinct* free variables —
+    a repeated tail variable (``dpath(0, X, X)``) adds an equality the
+    lowering cannot enforce.  Shared by ``Engine.ask_dense`` and the serving
+    layer's batch router so both agree on eligibility.
+    """
+    tail = q.args[1:]
+    if not (len(q.args) >= 2 and isinstance(q.args[0], Const)
+            and all(isinstance(a, Var) for a in tail)
+            and len({a.name for a in tail}) == len(tail)):
+        return None
+    return int(q.args[0].value)
 
 
 @dataclasses.dataclass(frozen=True)

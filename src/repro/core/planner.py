@@ -482,10 +482,10 @@ def pass_rewrite(program: Program, options: PlanOptions) -> tuple[Program, Magic
         except MagicError as e:
             raise PlanError(str(e)) from e
         return mr.program, mr, "rewrite(magic)"
-    return _demanded_strata(program, options.query.pred), None, "rewrite(demand)"
+    return demanded_strata(program, options.query.pred), None, "rewrite(demand)"
 
 
-def _demanded_strata(program: Program, pred: str) -> Program:
+def demanded_strata(program: Program, pred: str) -> Program:
     if pred not in program.idb_predicates():
         raise PlanError(f"query predicate {pred!r} is not an IDB predicate")
     needed, frontier = set(), [pred]

@@ -35,6 +35,7 @@ from .semiring import BOOL, MIN_PLUS, Semiring
 # ---------------------------------------------------------------------------
 
 
+@jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class DenseResult:
     table: jax.Array  # fixpoint matrix / vector
@@ -63,12 +64,18 @@ def fixpoint_dense(
       'linear'     D <- D ⊕ (Δmask·D) ⊗ arc          (tc r2 / dpath r2')
       'nonlinear'  D <- D ⊕ D ⊗ D                    (dpath r5; log-depth)
       'vector'     d <- d ⊕ arcᵀ-propagate(d)        (CC label propagation;
-                                                      d is (n,) and arc (n,n))
+                                                      d is (n,) and arc (n,n);
+                                                      a (B, n) init runs B
+                                                      frontiers as one batched
+                                                      fixpoint with per-row
+                                                      convergence masking)
       'sandwich'   S <- S ⊕ arcᵀ ⊗ (S ⊗ arc)         (same-generation)
       'accumulate' C = Σ Δ;  Δ <- Δ ⊗ arc            (path counting, +,×)
     """
     mm = matmul or sr.matmul
-    n = init.shape[0]
+    # domain size is the LAST dim: a batched (B, n) vector init must iterate
+    # to the domain's depth, not the batch's
+    n = init.shape[-1]
     if max_iters is None:
         max_iters = 4 * n + 8
 
@@ -100,7 +107,9 @@ def fixpoint_dense(
             Dm = jnp.where(mask[:, None], D, jnp.asarray(sr.zero, D.dtype))
             upd = sr.add(mm(Dm, D), mm(D, Dm))
         elif form == "vector":
-            dm = jnp.where(mask, D, jnp.asarray(sr.zero, D.dtype))
+            # batched (B, n) frontiers mask converged *rows*, not elements
+            rmask = mask if D.ndim == 1 else mask[:, None]
+            dm = jnp.where(rmask, D, jnp.asarray(sr.zero, D.dtype))
             upd = mm(dm[None, :], arc)[0] if D.ndim == 1 else mm(dm, arc)
         elif form == "sandwich":
             Dm = jnp.where(mask[:, None], D, jnp.asarray(sr.zero, D.dtype))
@@ -179,17 +188,71 @@ def single_source_distances_dense(w: jax.Array, src: int, matmul=None) -> DenseR
     return fixpoint_dense(MIN_PLUS, w, w[src], form="vector", matmul=matmul)
 
 
+# batched / cached front-ends (the serving layer's hot path) ------------------
+# A micro-batch of B single-source queries on the same decomposable predicate
+# shares ONE fixpoint: the frontier is a (B, n) matrix, each iteration one
+# ⊕.⊗ product, with per-row convergence masking.  ``fixpoint_dense_cached``
+# additionally runs under a shape-keyed jit so repeated batches of the same
+# padded shape skip re-tracing the while_loop.
+
+
+@functools.partial(jax.jit, static_argnames=("sr", "form", "matmul", "max_iters"))
+def _fixpoint_dense_jit(sr, arc, init, form, matmul, max_iters):
+    return fixpoint_dense(sr, arc, init, form=form, matmul=matmul,
+                          max_iters=max_iters)
+
+
+def fixpoint_dense_cached(
+    sr: Semiring,
+    arc: jax.Array,
+    init: jax.Array,
+    form: str = "linear",
+    matmul: Callable | None = None,
+    max_iters: int | None = None,
+) -> DenseResult:
+    """:func:`fixpoint_dense` under a shape-keyed jit.
+
+    ``sr``/``form``/``matmul`` are static (hashable; pass module-level
+    callables for ``matmul`` so the cache keys stay stable); ``arc``/``init``
+    are traced, so repeat calls with the same padded shapes reuse the
+    compiled while_loop.  ``max_iters`` is resolved here (it closes over the
+    domain size) to keep the static key deterministic per shape.
+    """
+    if max_iters is None:
+        max_iters = 4 * init.shape[-1] + 8
+    return _fixpoint_dense_jit(sr, arc, init, form, matmul, max_iters)
+
+
+def reachable_batch_dense(adj: jax.Array, srcs, matmul=None,
+                          max_iters: int | None = None) -> DenseResult:
+    """``?- tc(s, Y)`` for a batch of sources: one (B, n) masked fixpoint."""
+    init = adj[jnp.asarray(srcs)]
+    return fixpoint_dense_cached(BOOL, adj, init, form="vector", matmul=matmul,
+                                 max_iters=max_iters)
+
+
+def distances_batch_dense(w: jax.Array, srcs, matmul=None,
+                          max_iters: int | None = None) -> DenseResult:
+    """``?- spath(s, Z, D)`` for a batch of sources (min-plus carrier)."""
+    init = w[jnp.asarray(srcs)]
+    return fixpoint_dense_cached(MIN_PLUS, w, init, form="vector",
+                                 matmul=matmul, max_iters=max_iters)
+
+
 # ---------------------------------------------------------------------------
 # Tuple PSN — Algorithm 1, faithfully
 # ---------------------------------------------------------------------------
 
 
+@jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class EdbIndex:
     """A base relation indexed for equi-joins on a column subset.
 
     ``keys`` are the join columns packed+sorted; payload columns are gathered
     into the same order.  This is the engine's build-side hash table.
+    Registered as a pytree so indexes flow into cached jitted fixpoints as
+    *arguments* (never baked trace constants — see ``engine.GroupExecutor``).
     """
 
     keys: jax.Array  # (n,) int64 sorted
@@ -197,16 +260,30 @@ class EdbIndex:
     cols: tuple[jax.Array, ...]  # full tuple columns, sorted by keys
 
 
+def quantize_rows(n: int, minimum: int = 8) -> int:
+    """Shape bucket for data-dependent row counts: next power of two.
+
+    Materialized intermediate strata (magic sets above all) have
+    query-dependent cardinalities; padding their indexes/scans to bucketed
+    capacities keeps the number of distinct jit shapes logarithmic, so warm
+    queries hit already-compiled fixpoints (see ``engine.GroupExecutor``).
+    """
+    if n <= minimum:
+        return minimum
+    return 1 << (n - 1).bit_length()
+
+
 def build_edb_index(rows: np.ndarray, key_cols: tuple[int, ...], schema_bits: int) -> EdbIndex:
     rows = np.asarray(rows, np.int64)
     if rows.ndim == 1:  # single-column relation (reshape(-1) chokes on 0 rows)
         rows = rows[:, None]
     if len(rows) == 0:
-        # one sentinel row keeps every downstream gather in-bounds; count=0
-        # means no probe can match it (magic-restricted strata are often empty)
-        pad = np.zeros((1, rows.shape[1] if rows.size or rows.ndim > 1 else 1), np.int64)
+        # sentinel rows keep every downstream gather in-bounds; count=0
+        # means no probe can match them (magic-restricted strata are often
+        # empty)
+        pad = np.zeros((8, rows.shape[1] if rows.size or rows.ndim > 1 else 1), np.int64)
         return EdbIndex(
-            keys=jnp.full((1,), np.iinfo(np.int64).max, jnp.int64),
+            keys=jnp.full((8,), np.iinfo(np.int64).max, jnp.int64),
             count=jnp.asarray(0, jnp.int32),
             cols=tuple(jnp.asarray(pad[:, i], jnp.int32) for i in range(pad.shape[1])),
         )
@@ -215,10 +292,19 @@ def build_edb_index(rows: np.ndarray, key_cols: tuple[int, ...], schema_bits: in
     for c, shift in zip(key_cols, key_schema.shifts):
         keys = keys | (rows[:, c] << shift)
     order = np.argsort(keys, kind="stable")
+    skeys = keys[order]
+    scols = rows[order]
+    cap = quantize_rows(len(rows))
+    if cap > len(rows):
+        # EMPTY-pad to the shape bucket: sentinels sort last and sit beyond
+        # `count`, so no probe can match them
+        pad = cap - len(rows)
+        skeys = np.concatenate([skeys, np.full((pad,), np.iinfo(np.int64).max)])
+        scols = np.concatenate([scols, np.zeros((pad, rows.shape[1]), np.int64)])
     return EdbIndex(
-        keys=jnp.asarray(keys[order]),
+        keys=jnp.asarray(skeys),
         count=jnp.asarray(len(rows), jnp.int32),
-        cols=tuple(jnp.asarray(rows[order, i], jnp.int32) for i in range(rows.shape[1])),
+        cols=tuple(jnp.asarray(scols[:, i], jnp.int32) for i in range(rows.shape[1])),
     )
 
 

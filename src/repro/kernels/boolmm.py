@@ -56,3 +56,21 @@ def bool_matmul(a: jax.Array, b: jax.Array, *, bm: int = DEFAULT_BM,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bool_frontier_matmul(frontier: jax.Array, adj: jax.Array, *,
+                         interpret: bool = False) -> jax.Array:
+    """Micro-batched frontier step: (B, n) bool ⊗ (n, n) bool -> (B, n).
+
+    The serving layer's batch dimension B is a query count, not a tile-friendly
+    matrix dim — pad B to the f32 sublane multiple (8) and n to the lane
+    multiple (128) with ⊕-zeros (False), run the tiled kernel with an
+    8-row block so any padded B divides the grid, and slice the pad back off.
+    """
+    B, n = frontier.shape
+    pb, pn = (-B) % 8, (-n) % 128
+    f = jnp.pad(frontier, ((0, pb), (0, pn)))
+    a = jnp.pad(adj, ((0, pn), (0, pn)))
+    out = bool_matmul(f, a, bm=8, bn=128, bk=128, interpret=interpret)
+    return out[:B, :n]

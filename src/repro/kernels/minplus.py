@@ -57,3 +57,20 @@ def minplus_matmul(a: jax.Array, b: jax.Array, *, bm: int = DEFAULT_BM,
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         interpret=interpret,
     )(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def minplus_frontier_matmul(frontier: jax.Array, w: jax.Array, *,
+                            interpret: bool = False) -> jax.Array:
+    """Micro-batched frontier step: (B, n) ⊗_min,+ (n, n) -> (B, n).
+
+    Pads B to the f32 sublane multiple (8) and n to the lane multiple (128)
+    with ⊕-zeros (+inf — inf+inf stays inf, so pad lanes never win a min),
+    runs the tiled kernel with an 8-row block, and slices the pad back off.
+    """
+    B, n = frontier.shape
+    pb, pn = (-B) % 8, (-n) % 128
+    f = jnp.pad(frontier, ((0, pb), (0, pn)), constant_values=jnp.inf)
+    a = jnp.pad(w, ((0, pn), (0, pn)), constant_values=jnp.inf)
+    out = minplus_matmul(f, a, bm=8, bn=128, bk=32, interpret=interpret)
+    return out[:B, :n]

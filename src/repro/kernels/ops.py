@@ -11,9 +11,9 @@ import functools
 
 import jax
 
-from .boolmm import bool_matmul
+from .boolmm import bool_frontier_matmul, bool_matmul
 from .flash_attention import flash_attention
-from .minplus import minplus_matmul
+from .minplus import minplus_frontier_matmul, minplus_matmul
 from .relax import relax_step
 from .rglru_scan import rglru_scan
 
@@ -47,10 +47,31 @@ def rglru(a, b, **kw):
     return rglru_scan(a, b, **kw)
 
 
+def bool_frontier(a, b, **kw):
+    kw.setdefault("interpret", auto_interpret())
+    return bool_frontier_matmul(a, b, **kw)
+
+
+def minplus_frontier(a, b, **kw):
+    kw.setdefault("interpret", auto_interpret())
+    return minplus_frontier_matmul(a, b, **kw)
+
+
 def semiring_matmul(name: str):
     """Kernel-backed ⊗ for the dense engine (bool / min_plus)."""
     if name == "bool":
         return boolmm
     if name == "min_plus":
         return minplus
+    raise KeyError(name)
+
+
+def frontier_matmul(name: str):
+    """Kernel-backed batched frontier ⊗ for the serving layer: pads the
+    (B, n) query-batch frontier to tile-aligned shapes before dispatch.
+    Module-level callables — stable identities for shape-keyed jit caches."""
+    if name == "bool":
+        return bool_frontier
+    if name == "min_plus":
+        return minplus_frontier
     raise KeyError(name)

@@ -1,0 +1,13 @@
+"""Query-serving subsystem: resident Datalog sessions over the core engines.
+
+``DatalogService`` (``session.py``) loads a program + EDB once and answers
+query streams with memoized plans, micro-batched dense fixpoints
+(``batch.py``), an LRU result cache (``cache.py``), and incremental monotone
+EDB appends that resume — not recompute — cached fixpoints
+(``incremental.py``).  ``python -m repro.service.serve`` is the CLI
+front-end; ``benchmarks/bench_serve.py`` measures queries/sec.
+"""
+from .cache import CacheEntry, LRUCache
+from .session import DatalogService, ServiceStats
+
+__all__ = ["CacheEntry", "DatalogService", "LRUCache", "ServiceStats"]

@@ -1,0 +1,93 @@
+"""Micro-batching: coalesce B single-source queries into one dense fixpoint.
+
+B concurrent queries ``?- tc(s_i, Y)`` on the same decomposable predicate
+share one evaluation: their frontier rows stack into a (B, n) matrix and the
+semi-naive fixpoint runs once, each iteration a single ⊕.⊗ contraction on
+the MXU (``kernels.boolmm`` / ``kernels.minplus`` batched variants) with
+per-row convergence masking — one matmul serves the whole batch.
+
+Batch sizes quantize to the service's pad levels (1, 8, 32, 128, ...) with
+⊕-zero frontier rows, so every batch shape hits an already-compiled fixpoint
+(padded rows are all-zero and fall out of the row mask after one iteration).
+
+With a device mesh, the batch lowers to the distributed decomposable plan
+instead (``distributed.tc_frontier_decomposable``): frontier rows shard
+across devices exactly like the recursive relation in the paper's Fig. 4, so
+the per-iteration join stays shuffle-free.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.semiring import Semiring
+from ..core.seminaive import DenseResult, fixpoint_dense_cached
+
+
+def pad_batch_size(b: int, pads: tuple[int, ...]) -> int:
+    """Smallest pad level >= b; beyond the largest level, its next multiple."""
+    for p in pads:
+        if b <= p:
+            return p
+    top = pads[-1]
+    return ((b + top - 1) // top) * top
+
+
+def run_frontier_batch(
+    sr: Semiring,
+    matrix: jax.Array,
+    srcs: list[int],
+    pads: tuple[int, ...],
+    matmul=None,
+    mesh=None,
+    max_iters: int | None = None,
+    init: jax.Array | None = None,
+) -> DenseResult:
+    """One batched fixpoint answering ``len(srcs)`` single-source queries.
+
+    ``init`` overrides the (B, n) frontier seed — an append-resume passes the
+    previously closed rows ⊕ the post-append seed rows (``incremental.py``)
+    so resume and cold batches share this dispatch (and its compilations).
+    Returns a :class:`DenseResult` whose table's first ``len(srcs)`` rows are
+    the closure rows of the requested sources (pad rows follow).
+    """
+    b = len(srcs)
+    bp = pad_batch_size(b, pads)
+    if init is None:
+        init = matrix[jnp.asarray(srcs)]
+    if bp > b:
+        fill = jnp.full((bp - b, matrix.shape[1]), sr.zero, matrix.dtype)
+        init = jnp.concatenate([init, fill])
+    if mesh is not None:
+        closed, iters = _sharded(mesh, sr, matrix, init, matmul, max_iters)
+        return DenseResult(closed, iters, jnp.int64(0))
+    return fixpoint_dense_cached(sr, matrix, init, form="vector",
+                                 matmul=matmul, max_iters=max_iters)
+
+
+def _sharded(mesh, sr, matrix, init, matmul, max_iters):
+    from ..core.distributed import tc_frontier_decomposable
+    return tc_frontier_decomposable(mesh, matrix, init, sr=sr, matmul=matmul,
+                                    max_iters=max_iters)
+
+
+# -- answer formatting (dense carrier row -> Engine.ask-shaped numpy) --------
+
+
+def format_bool_row(src: int, row, n: int) -> np.ndarray:
+    """(n_alloc,) bool closure row -> (k, 2) int64 tc rows for source src."""
+    dst = np.nonzero(np.asarray(row[:n]))[0]
+    return np.stack([np.full(len(dst), src, np.int64), dst.astype(np.int64)],
+                    axis=1) if len(dst) else np.zeros((0, 2), np.int64)
+
+
+def format_minplus_row(src: int, row, n: int) -> tuple[np.ndarray, np.ndarray]:
+    """(n_alloc,) float32 distance row -> ((k, 2) rows, (k,) int64 values)."""
+    d = np.asarray(row[:n])
+    dst = np.nonzero(np.isfinite(d))[0]
+    if not len(dst):
+        return np.zeros((0, 2), np.int64), np.zeros((0,), np.int64)
+    rows = np.stack([np.full(len(dst), src, np.int64), dst.astype(np.int64)],
+                    axis=1)
+    return rows, d[dst].astype(np.int64)

@@ -1,0 +1,91 @@
+"""LRU result cache for the query-serving layer.
+
+Entries are whole query answers keyed by the query's constant pattern
+(``("tc", 1, None)``).  Two invalidation regimes, both driven by
+:meth:`repro.service.session.DatalogService.append`:
+
+* **tuple** entries (answers computed by the PSN engine) are dropped on any
+  append — the restricted model may have grown arbitrarily;
+* **dense** entries keep the raw closure row of their source alongside the
+  formatted answer, so an append *refreshes* them in place: the service
+  resumes the fixpoint from the cached rows (``incremental.py``) and calls
+  :meth:`LRUCache.replace`, keeping the cache warm across appends instead of
+  cold-starting every hot source.
+
+Every entry records the ``epoch`` (append counter) it was computed at —
+``assert entry.epoch == service.epoch`` is the staleness invariant.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Callable, Hashable
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    kind: str  # 'dense' | 'tuple'
+    pred: str
+    result: Any  # formatted answer: np rows, or (rows, values)
+    epoch: int  # service append-epoch the answer is valid for
+    src: int | None = None  # dense: the bound pivot (source vertex)
+    raw: Any = None  # dense: (n_alloc,) closure row in the semiring carrier
+
+
+class LRUCache:
+    """Ordered-dict LRU with hit/miss/eviction counters.
+
+    ``capacity <= 0`` disables caching (every ``get`` misses, ``put`` is a
+    no-op) so the serving benchmarks can measure uncached throughput through
+    the same code path.
+    """
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self._entries: "OrderedDict[Hashable, CacheEntry]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._entries
+
+    def get(self, key: Hashable) -> CacheEntry | None:
+        ent = self._entries.get(key)
+        if ent is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.hits += 1
+        return ent
+
+    def put(self, key: Hashable, entry: CacheEntry) -> None:
+        if self.capacity <= 0:
+            return
+        if key in self._entries:
+            self._entries.move_to_end(key)
+        self._entries[key] = entry
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+
+    def replace(self, key: Hashable, entry: CacheEntry) -> None:
+        """Refresh an entry in place without bumping its LRU position —
+        append-driven refreshes are maintenance, not access recency."""
+        if key in self._entries:
+            self._entries[key] = entry
+
+    def drop_where(self, pred: Callable[[Hashable, CacheEntry], bool]) -> int:
+        stale = [k for k, e in self._entries.items() if pred(k, e)]
+        for k in stale:
+            del self._entries[k]
+        return len(stale)
+
+    def items(self) -> list[tuple[Hashable, CacheEntry]]:
+        return list(self._entries.items())
+
+    def clear(self) -> None:
+        self._entries.clear()

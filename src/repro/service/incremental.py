@@ -1,0 +1,63 @@
+"""Monotone EDB appends + fixpoint resumption.
+
+Datalog under appends is *monotone*: new base facts can only add derived
+facts, so every engine state in this codebase (packed tables, dense semiring
+matrices) is a valid lower bound of the post-append model.  The engines are
+restart-idempotent (the SetRDD argument — see ``seminaive.py``), which makes
+incremental maintenance a one-liner in the lattice: re-enter the fixpoint
+**from the previous answer joined with the new-fact seed** instead of from
+scratch.  Convergence then takes as many iterations as the *delta* needs to
+propagate, not the full recursion depth.
+
+For a cached single-source closure row ``prev`` of source ``s`` and an
+appended arc matrix ``A'``:
+
+    d0 = prev ⊕ A'[s]          (prev alone can miss new arcs leaving s —
+                                s itself need not be in its own closure)
+    d  <- d ⊕ d ⊗ A'           until fixpoint
+
+``seed ⊑ d0 ⊑ lfp`` holds (prev and A'[s] are both below the new closure),
+so the inflationary iteration converges to exactly the new least fixpoint.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.semiring import Semiring
+
+
+def validate_append(rows: np.ndarray, arity: int, bits: int) -> np.ndarray:
+    """Normalize appended rows to the engine's (n, arity) int64 layout and
+    reject rows outside the packed bit domain (silent truncation hazard)."""
+    rows = np.asarray(rows, np.int64)
+    if rows.ndim == 1:
+        rows = rows[None, :] if rows.size else rows.reshape(0, arity)
+    if rows.ndim != 2 or rows.shape[1] != arity:
+        raise ValueError(
+            f"append rows have shape {rows.shape}; relation arity is {arity}")
+    limit = (1 << bits) - 1
+    if rows.size and (rows.min() < 0 or rows.max() > limit):
+        raise ValueError(f"appended rows exceed the {bits}-bit packed domain")
+    return rows
+
+
+def resume_init(sr: Semiring, prev_rows: jax.Array,
+                seed_rows: jax.Array) -> jax.Array:
+    """The resume seed ``d0 = prev ⊕ seed`` (see module docstring).
+
+    ``prev_rows``/``seed_rows``: (B, n) in the semiring carrier — the cached
+    closure rows and the post-append frontier rows (``matrix[srcs]``) for the
+    same B sources.  Feed the result to ``batch.run_frontier_batch(init=...)``
+    so resume and cold batches share one dispatch (and its compilations).
+    """
+    return sr.add(prev_rows, seed_rows)
+
+
+def pad_rows(rows: jax.Array, n_alloc: int, zero) -> jax.Array:
+    """Right-pad (B, n_old) carrier rows to (B, n_alloc) after domain growth."""
+    grow = n_alloc - rows.shape[-1]
+    if grow <= 0:
+        return rows
+    return jnp.pad(rows, ((0, 0), (0, grow)), constant_values=zero)

@@ -1,0 +1,184 @@
+"""CLI front-end for :class:`~repro.service.session.DatalogService`.
+
+Load a program + EDB once, then answer query bursts, appends, or an
+interactive stream::
+
+    # demo graph, two queries, one append, service stats
+    PYTHONPATH=src python -m repro.service.serve \\
+        --synthetic gnp:400:0.005 \\
+        --query "tc(0, X)" --query "tc(5, X)" \\
+        --append "arc:0,399" --query "tc(0, X)" --stats
+
+    # your own program/EDB (CSV rows, one relation per file: name.csv)
+    PYTHONPATH=src python -m repro.service.serve \\
+        --program prog.dl --edb arc=arcs.csv --query "tc(1, X)"
+
+    # interactive: one query / append / stats command per line
+    ... --repl        (tc(1,X)  |  +arc:4,5  |  :stats  |  :quit)
+
+Actions execute in command-line order; ``--query`` answers print one row per
+line.  ``--batch`` coalesces consecutive ``--query`` flags into one
+micro-batched ``ask_batch`` call.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import numpy as np
+
+TC_DEMO = """
+tc(X,Y) <- arc(X,Y).
+tc(X,Y) <- tc(X,Z), arc(Z,Y).
+"""
+
+
+def _synthetic(spec: str) -> np.ndarray:
+    """gnp:N:P | grid:N | tree:H | paths:COUNT:LEN -> 'arc' edge list."""
+    from ..data.graphs import gnp_graph, grid_graph, tree_graph
+
+    kind, *args = spec.split(":")
+    if kind == "gnp":
+        return gnp_graph(int(args[0]), float(args[1]) if len(args) > 1 else 0.001)
+    if kind == "grid":
+        return grid_graph(int(args[0]))
+    if kind == "tree":
+        return tree_graph(int(args[0]))
+    if kind == "paths":
+        count, length = int(args[0]), int(args[1]) if len(args) > 1 else 5
+        edges, v = [], 0
+        for _ in range(count):
+            for _ in range(length):
+                edges.append((v, v + 1))
+                v += 1
+            v += 1
+        return np.asarray(edges, np.int64)
+    raise SystemExit(f"unknown synthetic family {kind!r}")
+
+
+def _load_edb(specs: list[str]) -> dict[str, np.ndarray]:
+    db = {}
+    for spec in specs:
+        name, _, path = spec.partition("=")
+        if not path:
+            raise SystemExit(f"--edb wants name=file.csv, got {spec!r}")
+        db[name] = np.loadtxt(path, delimiter=",", dtype=np.int64, ndmin=2)
+    return db
+
+
+def _print_answer(query: str, res) -> None:
+    if isinstance(res, tuple):
+        rows, vals = res
+        print(f"{query}  [{len(rows)} rows]")
+        for r, v in zip(rows.tolist(), vals.tolist()):
+            print("  " + ", ".join(map(str, [*r, v])))
+    else:
+        print(f"{query}  [{len(res)} rows]")
+        for r in np.asarray(res).tolist():
+            print("  " + ", ".join(map(str, r)))
+
+
+def _parse_append(spec: str) -> tuple[str, np.ndarray]:
+    rel, _, rows = spec.partition(":")
+    if not rows:
+        raise SystemExit(f"--append wants rel:v1,v2[,w][;v1,v2...], got {spec!r}")
+    parsed = [[int(x) for x in row.split(",")] for row in rows.split(";")]
+    return rel, np.asarray(parsed, np.int64)
+
+
+def _repl(svc) -> None:
+    print("serve> tc(1,X) queries | +arc:4,5 appends | :stats | :quit",
+          file=sys.stderr)
+    for line in sys.stdin:
+        line = line.strip()
+        if not line:
+            continue
+        if line in (":quit", ":q"):
+            break
+        if line == ":stats":
+            print(json.dumps(svc.explain(), indent=2))
+            continue
+        try:
+            if line.startswith("+"):
+                rel, rows = _parse_append(line[1:])
+                svc.append(rel, rows)
+                print(f"appended {len(rows)} rows to {rel} "
+                      f"(epoch {svc.epoch})")
+            else:
+                _print_answer(line, svc.ask(line))
+        except Exception as e:  # keep serving on bad input
+            print(f"error: {e}", file=sys.stderr)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.service.serve", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--program", help="Datalog program file (default: TC demo)")
+    ap.add_argument("--edb", action="append", default=[],
+                    metavar="NAME=FILE.csv", help="load a relation from CSV")
+    ap.add_argument("--synthetic", metavar="FAMILY:ARGS",
+                    help="synthetic 'arc' relation: gnp:N[:P] | grid:N | "
+                         "tree:H | paths:COUNT[:LEN]")
+    ap.add_argument("--query", dest="actions", action="append",
+                    type=lambda s: ("query", s), metavar="'tc(1, X)'")
+    ap.add_argument("--append", dest="actions", action="append",
+                    type=lambda s: ("append", s), metavar="rel:v1,v2[;...]")
+    ap.set_defaults(actions=[])  # --query/--append interleave in CLI order
+    ap.add_argument("--batch", action="store_true",
+                    help="coalesce consecutive --query flags into ask_batch")
+    ap.add_argument("--cache", type=int, default=1024,
+                    help="result-cache capacity (0 disables)")
+    ap.add_argument("--default-cap", type=int, default=1 << 16)
+    ap.add_argument("--stats", action="store_true",
+                    help="print service stats after all actions")
+    ap.add_argument("--repl", action="store_true",
+                    help="read queries/appends from stdin after the actions")
+    args = ap.parse_args(argv)
+
+    program = TC_DEMO
+    if args.program:
+        with open(args.program) as f:
+            program = f.read()
+    db = _load_edb(args.edb)
+    if args.synthetic:
+        db["arc"] = _synthetic(args.synthetic)
+    if not db:
+        raise SystemExit("no EDB: pass --edb and/or --synthetic")
+
+    from .session import DatalogService
+    svc = DatalogService(program, db, result_cache=args.cache,
+                         default_cap=args.default_cap)
+
+    pending: list[str] = []
+
+    def flush():
+        if not pending:
+            return
+        for query, res in zip(pending, svc.ask_batch(list(pending))):
+            _print_answer(query, res)
+        pending.clear()
+
+    for kind, spec in args.actions:
+        if kind == "query":
+            if args.batch:
+                pending.append(spec)
+            else:
+                _print_answer(spec, svc.ask(spec))
+        else:
+            flush()
+            rel, rows = _parse_append(spec)
+            svc.append(rel, rows)
+            print(f"appended {len(rows)} rows to {rel} (epoch {svc.epoch})")
+    flush()
+
+    if args.repl:
+        _repl(svc)
+    if args.stats:
+        print(json.dumps(svc.explain(), indent=2))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

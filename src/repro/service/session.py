@@ -1,0 +1,494 @@
+"""``DatalogService`` — load a program + EDB once, answer query streams fast.
+
+``Engine.ask()`` is built for one-shot queries: every call re-runs the magic
+rewrite, re-plans, and evaluates a solo fixpoint.  A service amortizes all of
+that across the stream:
+
+* **plan/template memoization** — the magic rewrite and compiled plan for a
+  query *shape* (predicate + adornment) build once: the seed constants are
+  moved out of the rewritten program into a tiny seed EDB relation
+  (``m__tc__bf(X) <- __qseed(X)``), so every ``tc(c, _)`` query shares one
+  plan and — via the engine's structurally-keyed runner cache — one compiled
+  fixpoint.  Repeat query shapes never re-plan or re-trace.
+* **micro-batched dense fixpoints** — B concurrent single-source queries on
+  a decomposable predicate coalesce into one (B, n) frontier fixpoint
+  (``batch.py``); one ⊕.⊗ product per iteration serves the whole batch, and
+  a device mesh shards the batch rows Fig.-4 style.
+* **result caching** — an LRU of whole answers (``cache.py``) keyed by the
+  query constants, epoch-tagged.
+* **incremental appends** — monotone EDB appends resume cached dense
+  closures from the new-fact delta frontier (``incremental.py``) instead of
+  recomputing, and invalidate only what they must.
+
+    svc = DatalogService(TC, db={"arc": edges})
+    svc.ask("tc", (1, None))                  # cold: plan + fixpoint
+    svc.ask_batch([("tc", (s, None)) for s in sources])   # one fixpoint
+    svc.append("arc", [[7, 8]])               # resume, don't recompute
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.engine import Engine, as_query_literal, query_row_mask
+from ..core.ir import Const, Literal, Program, Rule, Var, fresh_var
+from ..core.magic import (BOUND, FrontierLowering, MagicError,
+                          detect_frontier_lowering, frontier_query_source,
+                          query_adornment)
+from ..core.magic import rewrite as magic_rewrite
+from ..core.parser import parse_program
+from ..core.planner import PlanError, demanded_strata
+from ..core.semiring import BOOL, MIN_PLUS
+from . import batch as _batch
+from . import incremental as _inc
+from .cache import CacheEntry, LRUCache
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    """Evaluation-side counters; result-cache hit/miss counters live on the
+    :class:`~repro.service.cache.LRUCache` itself (``service.cache.hits``)."""
+
+    plans_built: int = 0  # templates constructed (magic rewrite + plan)
+    plan_hits: int = 0  # queries served by a memoized template
+    tuple_runs: int = 0  # PSN evaluations (template engine runs)
+    dense_fixpoints: int = 0  # batched dense fixpoints launched
+    batched_queries: int = 0  # queries answered by those fixpoints
+    appends: int = 0
+    resumed_rows: int = 0  # cached closures refreshed by append-resume
+
+
+def _freeze(res):
+    """Mark a cached answer's arrays read-only: cache hits (and duplicate
+    queries in one batch) hand out the SAME arrays, so a caller mutating an
+    answer must fail loudly instead of corrupting every later hit."""
+    for a in res if isinstance(res, tuple) else (res,):
+        a.flags.writeable = False
+    return res
+
+
+class _DenseRelation:
+    """Dense carrier state for one decomposable predicate.
+
+    The (n_alloc, n_alloc) semiring matrix of the base relation builds once
+    per service (``Engine.ask_dense`` rebuilds it per call) and is maintained
+    under appends.  ``n_alloc`` rounds the live domain up to ``n_align`` so
+    small domain growth keeps the compiled fixpoint shapes stable.
+    """
+
+    def __init__(self, svc: "DatalogService", low: FrontierLowering):
+        self.low = low
+        self.sr = BOOL if low.kind == "bool" else MIN_PLUS
+        self.n = 0
+        self.n_alloc = 0
+        self.matrix = None
+        self._rebuild(svc)
+
+    def _rebuild(self, svc: "DatalogService"):
+        edges = svc.db.get(self.low.edb, np.zeros((0, 2), np.int64))
+        n = int(edges[:, :2].max()) + 1 if len(edges) else 0
+        align = svc.n_align
+        self.n = n
+        self.n_alloc = max(((n + align - 1) // align) * align, align)
+        if self.low.kind == "bool":
+            adj = np.zeros((self.n_alloc, self.n_alloc), bool)
+            if len(edges):
+                adj[edges[:, 0], edges[:, 1]] = True
+            self.matrix = jnp.asarray(adj)
+        else:
+            w = np.full((self.n_alloc, self.n_alloc), np.inf, np.float32)
+            if len(edges):
+                np.minimum.at(w, (edges[:, 0], edges[:, 1]),
+                              edges[:, 2].astype(np.float32))
+            self.matrix = jnp.asarray(w)
+
+    def append(self, svc: "DatalogService", rows: np.ndarray) -> bool:
+        """Fold appended arcs into the matrix; returns True when the domain
+        outgrew the allocation (a rebuild — cached rows need re-padding)."""
+        new_n = max(self.n, int(rows[:, :2].max()) + 1 if len(rows) else 0)
+        if new_n > self.n_alloc:
+            self._rebuild(svc)  # svc.db already holds the appended relation
+            return True
+        self.n = new_n
+        if len(rows):
+            if self.low.kind == "bool":
+                self.matrix = self.matrix.at[rows[:, 0], rows[:, 1]].set(True)
+            else:
+                self.matrix = self.matrix.at[rows[:, 0], rows[:, 1]].min(
+                    jnp.asarray(rows[:, 2], jnp.float32))
+        return False
+
+
+class _QueryTemplate:
+    """Memoized evaluation template for one (predicate, adornment) shape.
+
+    ``mode='magic'``: the magic-rewritten program with the seed fact swapped
+    for a seed-EDB rule; per query only the seed rows change, so the plan and
+    (via the engine's runner cache) the compiled fixpoints are reused.
+
+    ``mode='demand'``: fallback when the magic program cannot plan (cartesian
+    magic prefixes, PreM violations through magic cycles — mirroring
+    ``Engine._query_engine``).  The demanded-strata model is constant-free,
+    so it evaluates once and every query of the shape post-filters it.
+    """
+
+    def __init__(self, svc: "DatalogService", q: Literal, adn: str):
+        self.pred = q.pred
+        self.adn = adn
+        self.bound_positions = [i for i, c in enumerate(adn) if c == BOUND]
+        self.seed_rel = f"__qseed_{q.pred}__{adn}"
+        self._model_fresh = False
+        eng_kw = dict(bits=svc.bits, default_cap=svc.default_cap,
+                      join_cap=svc.join_cap, max_iters=svc.max_iters)
+        try:
+            mr = magic_rewrite(svc.program, q)
+            caps = dict(svc.caps)
+            for name, orig in mr.aliases.items():
+                if orig in svc.caps:
+                    caps.setdefault(name, svc.caps[orig])
+            db = dict(svc.db)
+            if mr.seed_rule is not None:
+                db[self.seed_rel] = np.zeros((1, len(self.bound_positions)),
+                                             np.int64)
+            self.mode = "magic"
+            self.result_pred = mr.query_pred
+            self.engine = Engine(self._parameterize(mr), db=db, caps=caps,
+                                 **eng_kw)
+        except (MagicError, PlanError):
+            self.mode = "demand"
+            self.result_pred = q.pred
+            self.engine = Engine(demanded_strata(svc.program, q.pred),
+                                 db=dict(svc.db), caps=dict(svc.caps), **eng_kw)
+
+    def _parameterize(self, mr) -> Program:
+        rules, dropped = [], False
+        for r in mr.program.rules:
+            if not dropped and r is mr.seed_rule:
+                dropped = True
+                continue
+            rules.append(r)
+        if mr.seed_rule is not None:
+            vs = tuple(fresh_var("_s") for _ in mr.seed_rule.head.args)
+            rules.append(Rule(Literal(mr.seed_rule.head.pred, vs),
+                              (Literal(self.seed_rel, vs),)))
+        return Program(rules)
+
+    def run(self, svc: "DatalogService", q: Literal):
+        eng = self.engine
+        if self.mode == "demand" or not self.bound_positions:
+            # constant-free evaluation: the model answers every query of the
+            # shape — evaluate once per epoch, post-filter per query
+            if not self._model_fresh:
+                eng.invalidate().run()
+                self._model_fresh = True
+            return self._filter(q)
+        consts = [[int(q.args[i].value) for i in self.bound_positions]]
+        eng.db[self.seed_rel] = np.asarray(consts, np.int64)
+        eng.invalidate(self.seed_rel).run()
+        return self._filter(q)
+
+    def _filter(self, q: Literal):
+        """Restrict the evaluated model to the query goal — bound-position
+        constants included (the demanded set may exceed the queried set) and
+        repeated-variable equalities (``tc(X, X)``)."""
+        eng = self.engine
+        rows, vals = eng.materialized[self.result_pred]
+        info = eng._pred_info[self.result_pred]
+        mask = query_row_mask(q, rows, vals, info)
+        if info.is_agg:
+            return rows[mask], vals[mask]
+        return rows[mask]
+
+    def on_append(self, svc: "DatalogService", rel: str):
+        if rel not in self.engine.db:
+            return
+        self.engine.db[rel] = svc.db[rel]
+        self.engine.invalidate(rel)
+        self._model_fresh = False
+
+
+class DatalogService:
+    """A resident Datalog query server over one program + EDB.
+
+    Parameters mirror :class:`Engine`; additionally:
+
+    ``result_cache``  LRU capacity for whole-answer caching (0 disables).
+    ``matmul``        dense-contraction override: ``None`` (jnp reference),
+                      ``'pallas'`` (the tiled kernels in ``repro.kernels``),
+                      or any ``(B, n) x (n, n)`` callable.
+    ``mesh``          a jax device mesh — micro-batches shard their frontier
+                      rows across it (the Fig.-4 decomposable plan).
+    ``batch_pads``    batch-size quantization levels; padded batches reuse
+                      already-compiled fixpoint shapes.
+    ``n_align``       dense domain-size alignment (appends that stay under
+                      the allocation keep compiled shapes stable).
+    """
+
+    def __init__(self, program, db: dict[str, np.ndarray], *, bits: int = 18,
+                 caps: dict[str, int] | None = None, default_cap: int = 1 << 16,
+                 join_cap: int | None = None, max_iters: int = 1 << 16,
+                 constants: dict[str, int] | None = None,
+                 result_cache: int = 1024, matmul=None, mesh=None,
+                 batch_pads: tuple[int, ...] = (1, 8, 32, 128),
+                 n_align: int = 128):
+        if isinstance(program, str):
+            program = parse_program(program, constants=constants)
+        self.program = program
+        self.bits = bits
+        self.caps = dict(caps or {})
+        self.default_cap = default_cap
+        self.join_cap = join_cap
+        self.max_iters = max_iters
+        self.mesh = mesh
+        self.batch_pads = tuple(batch_pads)
+        self.n_align = n_align
+        self._matmul_opt = matmul
+        # the base engine owns db normalization + domain validation; sharing
+        # its dict means appends propagate without copying
+        self._base = Engine(program, db=db, bits=bits, caps=self.caps,
+                            default_cap=default_cap, join_cap=join_cap,
+                            max_iters=max_iters)
+        self.db = self._base.db
+        self.epoch = 0
+        self.stats = ServiceStats()
+        self.cache = LRUCache(result_cache)
+        self._templates: dict[tuple[str, str], _QueryTemplate] = {}
+        self._dense: dict[str, _DenseRelation] = {}
+        self._lowerings: dict[str, FrontierLowering | None] = {}
+
+    # -- queries -------------------------------------------------------------
+
+    def ask(self, pred, args: tuple | None = None):
+        """Answer one query (``Engine.ask`` forms).  Equivalent to a batch of
+        one — same caches, same compiled fixpoints."""
+        return self.ask_batch([pred if args is None else (pred, args)])[0]
+
+    def ask_batch(self, queries: list) -> list:
+        """Answer a micro-batch of queries; returns answers in order.
+
+        Single-source queries on the same decomposable predicate coalesce
+        into one batched dense fixpoint; everything else runs through the
+        memoized tuple templates.  Every answer lands in the result cache.
+        """
+        qlits = [self._as_literal(s) for s in queries]
+        out: list = [None] * len(qlits)
+        dense: dict[str, list[tuple[int, int, Literal]]] = {}
+        singles: list[tuple[int, Literal]] = []
+        for i, q in enumerate(qlits):
+            key = self._cache_key(q)
+            ent = self.cache.get(key)
+            if ent is not None:
+                assert ent.epoch == self.epoch, "stale cache entry survived append"
+                out[i] = self._entry_result(ent)
+                continue
+            if q.pred in self.db:  # EDB query: a pure selection
+                out[i] = self._ask_edb(q)
+                continue
+            src = self._dense_source(q)
+            if src is not None:
+                dense.setdefault(q.pred, []).append((i, src, q))
+            else:
+                singles.append((i, q))
+        for pred, items in dense.items():
+            self._run_dense_batch(pred, items, out)
+        computed: dict = {}  # dedupe identical tuple queries within the batch
+        for i, q in singles:
+            key = self._cache_key(q)
+            if key not in computed:
+                computed[key] = _freeze(self._ask_tuple(q))
+                self.cache.put(key, CacheEntry("tuple", q.pred, computed[key],
+                                               self.epoch))
+            out[i] = computed[key]
+        return out
+
+    # -- appends -------------------------------------------------------------
+
+    def append(self, rel: str, rows) -> "DatalogService":
+        """Monotone EDB append: add facts, keep serving.
+
+        Tuple-path answers are invalidated; cached dense closures are
+        *resumed* from their previous rows over the appended arc matrix
+        (``incremental.py``) so hot sources stay warm.
+        """
+        if rel not in self.db:
+            raise ValueError(
+                f"{rel!r} is not an EDB relation of this service "
+                f"(known: {sorted(self.db)}); appends are EDB-only")
+        rows = _inc.validate_append(rows, self.db[rel].shape[1], self.bits)
+        self.db[rel] = np.concatenate([self.db[rel], rows], axis=0)
+        self.epoch += 1
+        self.stats.appends += 1
+        self._base.invalidate(rel)
+        for tpl in self._templates.values():
+            tpl.on_append(self, rel)
+        self.cache.drop_where(lambda k, e: e.kind == "tuple")
+        for k, e in self.cache.items():
+            if e.kind == "dense" and self._lowering(e.pred).edb != rel:
+                e.epoch = self.epoch  # untouched base relation: still valid
+        for pred, ds in self._dense.items():
+            if ds.low.edb == rel:
+                self._refresh_dense(pred, ds, rows)
+        return self
+
+    # -- introspection -------------------------------------------------------
+
+    def explain(self) -> dict:
+        return {
+            "epoch": self.epoch,
+            "stats": dataclasses.asdict(self.stats),
+            "cache": {"entries": len(self.cache), "hits": self.cache.hits,
+                      "misses": self.cache.misses,
+                      "evictions": self.cache.evictions},
+            "templates": sorted(f"{p}/{a}" for p, a in self._templates),
+            "dense": {p: {"n": ds.n, "n_alloc": ds.n_alloc,
+                          "semiring": ds.sr.name}
+                      for p, ds in self._dense.items()},
+        }
+
+    # -- internals -----------------------------------------------------------
+
+    def _as_literal(self, spec) -> Literal:
+        q = as_query_literal(spec)
+        limit = (1 << self.bits) - 1
+        for a in q.args:
+            if isinstance(a, Const) and not (0 <= a.value <= limit):
+                raise ValueError(
+                    f"query constant {a.value} exceeds the {self.bits}-bit "
+                    "packed domain")
+        if q.pred in self.db:
+            arity = self.db[q.pred].shape[1]
+        elif q.pred in self.program.idb_predicates():
+            arity = self.program.rules_for(q.pred)[0].head.arity
+        else:
+            raise PlanError(f"unknown predicate {q.pred!r}")
+        if len(q.args) != arity:
+            raise PlanError(
+                f"query {q!r} has arity {len(q.args)} but {q.pred} has "
+                f"arity {arity}")
+        return q
+
+    def _cache_key(self, q: Literal):
+        # free positions key on their variable-repetition pattern, not just
+        # "free": tc(X, Y) and tc(X, X) are different queries
+        seen: dict[str, int] = {}
+        return (q.pred,) + tuple(
+            int(a.value) if isinstance(a, Const)
+            else f"~{seen.setdefault(a.name, i)}"
+            for i, a in enumerate(q.args))
+
+    def _ask_edb(self, q: Literal) -> np.ndarray:
+        # Engine.ask owns the EDB-selection semantics (constant + repeated-
+        # variable filters); the base engine shares this service's db dict
+        return self._base.ask(q)
+
+    def _lowering(self, pred: str) -> FrontierLowering | None:
+        if pred not in self._lowerings:
+            self._lowerings[pred] = detect_frontier_lowering(self.program, pred)
+        return self._lowerings[pred]
+
+    def _dense_source(self, q: Literal) -> int | None:
+        if self._lowering(q.pred) is None:
+            return None
+        # repeated-variable tails route to the tuple path (shared predicate
+        # with Engine.ask_dense keeps the two routers agreeing)
+        return frontier_query_source(q)
+
+    def _dense_state(self, pred: str) -> _DenseRelation:
+        if pred not in self._dense:
+            self._dense[pred] = _DenseRelation(self, self._lowering(pred))
+        return self._dense[pred]
+
+    def _matmul(self, sr):
+        if self._matmul_opt is None:
+            return None
+        if self._matmul_opt == "pallas":
+            from ..kernels import ops as kops
+            return kops.frontier_matmul(sr.name)
+        return self._matmul_opt
+
+    def _format(self, ds: _DenseRelation, src: int, row):
+        if ds.low.kind == "bool":
+            return _batch.format_bool_row(src, row, ds.n)
+        return _batch.format_minplus_row(src, row, ds.n)
+
+    def _entry_result(self, ent: CacheEntry):
+        if ent.result is None:  # append-resumed entry: format on first serve
+            ent.result = _freeze(self._format(self._dense_state(ent.pred),
+                                              ent.src, ent.raw))
+        return ent.result
+
+    def _empty_dense(self, ds: _DenseRelation, src: int):
+        return self._format(ds, src, jnp.full((0,), ds.sr.zero))
+
+    def _run_dense_batch(self, pred: str, items, out):
+        ds = self._dense_state(pred)
+        uniq: list[int] = []
+        for _, src, _ in items:
+            if src not in uniq:
+                uniq.append(src)
+        in_range = [s for s in uniq if s < ds.n_alloc]
+        results: dict[int, object] = {}
+        if in_range:
+            res = _batch.run_frontier_batch(
+                ds.sr, ds.matrix, in_range, self.batch_pads,
+                matmul=self._matmul(ds.sr), mesh=self.mesh)
+            self.stats.dense_fixpoints += 1
+            self.stats.batched_queries += len(in_range)
+            for j, s in enumerate(in_range):
+                results[s] = self._format(ds, s, res.table[j])
+                self._cache_dense(pred, s, results[s], res.table[j])
+        for s in uniq:
+            if s not in results:  # source beyond the domain: nothing reachable
+                results[s] = self._empty_dense(ds, s)
+        for i, src, _ in items:
+            out[i] = results[src]
+
+    def _cache_dense(self, pred: str, src: int, formatted, raw):
+        low = self._lowering(pred)
+        arity = 2 if low.kind == "bool" else 3
+        # the canonical single-source pattern key: distinct free tail vars
+        key = (pred, src) + tuple(f"~{i}" for i in range(1, arity))
+        self.cache.put(key, CacheEntry("dense", pred, _freeze(formatted),
+                                       self.epoch, src=src, raw=raw))
+
+    def _refresh_dense(self, pred: str, ds: _DenseRelation, new_rows: np.ndarray):
+        grown = ds.append(self, new_rows)
+        entries = [(k, e) for k, e in self.cache.items()
+                   if e.kind == "dense" and e.pred == pred]
+        if not entries:
+            return
+        srcs = [e.src for _, e in entries]
+        prev = jnp.stack([e.raw for _, e in entries])
+        if grown:
+            prev = _inc.pad_rows(prev, ds.n_alloc, ds.sr.zero)
+        seed = ds.matrix[jnp.asarray(srcs)]
+        table = _batch.run_frontier_batch(
+            ds.sr, ds.matrix, srcs, self.batch_pads,
+            matmul=self._matmul(ds.sr), mesh=self.mesh,
+            init=_inc.resume_init(ds.sr, prev, seed)).table
+        self.stats.dense_fixpoints += 1
+        self.stats.resumed_rows += len(entries)
+        for j, (key, e) in enumerate(entries):
+            # result=None defers answer formatting to the entry's next hit —
+            # an append refreshes validity, serving formats
+            self.cache.replace(key, CacheEntry(
+                "dense", pred, None, self.epoch, src=e.src, raw=table[j]))
+
+    def _ask_tuple(self, q: Literal):
+        agg_pos = -1
+        for r in self.program.rules_for(q.pred):
+            if r.agg is not None:
+                agg_pos = r.agg.position
+        adn = query_adornment(q, agg_pos)
+        key = (q.pred, adn)
+        tpl = self._templates.get(key)
+        if tpl is None:
+            tpl = _QueryTemplate(self, q, adn)
+            self._templates[key] = tpl
+            self.stats.plans_built += 1
+        else:
+            self.stats.plan_hits += 1
+        self.stats.tuple_runs += 1
+        return tpl.run(self, q)

@@ -101,3 +101,34 @@ def test_kernel_backed_dense_engine():
     res_k = transitive_closure_dense(
         adj, matmul=lambda a, b: ops.boolmm(a, b, bm=64, bn=64, bk=64))
     assert jnp.array_equal(res_ref.table, res_k.table)
+
+
+@given(st.sampled_from([1, 3, 8, 17]), st.sampled_from([50, 128, 200]))
+@settings(max_examples=6, deadline=None)
+def test_bool_frontier_padding(b, n):
+    """The serving batch ⊗: ragged (B, n) pads to tiles with ⊕-zeros."""
+    f = jnp.asarray(RNG.random((b, n)) < 0.2)
+    adj = jnp.asarray(RNG.random((n, n)) < 0.1)
+    want = jnp.matmul(f.astype(jnp.float32), adj.astype(jnp.float32)) > 0
+    assert jnp.array_equal(ops.bool_frontier(f, adj), want)
+
+
+@given(st.sampled_from([1, 3, 8, 17]), st.sampled_from([50, 128, 200]))
+@settings(max_examples=6, deadline=None)
+def test_minplus_frontier_padding(b, n):
+    """Pad lanes are +inf: they must never win a min over real entries."""
+    f = rand_dist(b, n, 0.3)
+    w = rand_dist(n, n, 0.1)
+    assert jnp.array_equal(ops.minplus_frontier(f, w), ref.minplus_ref(f, w))
+
+
+def test_frontier_matmul_drives_batched_fixpoint():
+    """The padded frontier kernels are drop-in ⊗ for the batched serving
+    fixpoint (the matmul='pallas' service path)."""
+    from repro.core.seminaive import reachable_batch_dense
+    n = 100
+    adj = jnp.asarray(RNG.random((n, n)) < 0.04)
+    srcs = [0, 7, 63]
+    res_ref = reachable_batch_dense(adj, srcs)
+    res_k = reachable_batch_dense(adj, srcs, matmul=ops.bool_frontier)
+    assert jnp.array_equal(res_ref.table, res_k.table)
