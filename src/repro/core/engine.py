@@ -46,15 +46,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from .ir import Const, Literal, Program, Term, Var, fresh_var
-from .magic import detect_frontier_lowering, frontier_query_source
+from .magic import (MagicError, detect_frontier_lowering,
+                    frontier_query_source)
 from .parser import parse_program, parse_query
 from .planner import (CompiledRule, EdbJoinStep, GroupPlan, PlanError,
                       PlanOptions, ProgramPlan, SourceDelta, SourceEdb,
-                      plan_program)
+                      batch_adornment, plan_program)
 from .relation import EMPTY, AggTable, FactTable, Schema, _MERGE_INIT
 from .seminaive import (Bindings, EdbIndex, build_edb_index, join_edb,
-                        join_idb_prefix, quantize_rows, reachable_from_dense,
-                        single_source_distances_dense)
+                        join_idb_prefix, pack_warm_rows, quantize_rows,
+                        reachable_from_dense, single_source_distances_dense)
 
 
 class CapacityError(RuntimeError):
@@ -127,6 +128,26 @@ def query_row_mask(q: Literal, rows, vals, info=None) -> np.ndarray:
         for pos in ps[1:]:
             mask &= col(ps[0]) == col(pos)
     return mask
+
+
+def split_qid_answers(pred: str, rows, vals, info, qlits, qids=None) -> list:
+    """Per-seed attribution: split a qid-tagged model into per-query answers.
+
+    ``rows``/``vals`` carry the query-id in key column 0; for each goal the
+    qid selects its slice, then the goal's own constants / repeated variables
+    filter exactly like the single-query path (the demanded set may exceed
+    the queried set).  The ONE splitting semantics shared by
+    ``Engine._finalize_batch`` and the serving layer's batched templates.
+    ``qids`` overrides the per-goal qid tags (default: position order).
+    """
+    out = []
+    for k, q in enumerate(qlits):
+        qid = k if qids is None else qids[k]
+        shifted = Literal(pred, (Const(qid),) + q.args)
+        mask = query_row_mask(shifted, rows, vals, info)
+        r = rows[mask][:, 1:]  # drop the qid column
+        out.append((r, vals[mask]) if info.is_agg else r)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -430,21 +451,35 @@ class Engine:
         max_iters: int = 1 << 16,
         constants: dict[str, int] | None = None,
         query: QuerySpec | None = None,
+        batch: list | tuple | None = None,
         magic: bool = True,
     ):
         if isinstance(program, str):
             program = parse_program(program, constants=constants)
         self.source_program = program
-        if query is None and program.queries:
+        if query is None and batch is None and program.queries:
             if len(program.queries) > 1:
-                raise ValueError(
-                    f"program has {len(program.queries)} '?-' goals; an "
-                    "Engine evaluates one query — use ask() for the others")
-            query = program.queries[0]
+                # multi-goal program: same-shape goals evaluate as ONE
+                # qid-batched fixpoint (run() + batch_results())
+                shapes = {(q.pred, batch_adornment(program, q))
+                          for q in program.queries}
+                if len(shapes) > 1 or not magic:
+                    raise ValueError(
+                        f"program has {len(program.queries)} '?-' goals of "
+                        f"{len(shapes)} shapes (magic={magic}); one engine "
+                        "plans one magic-batched shape — use ask_batch() "
+                        "for mixed goals or demand-only evaluation")
+                batch = tuple(program.queries)
+            else:
+                query = program.queries[0]
+        if query is not None and batch is not None:
+            raise ValueError("pass query= or batch=, not both")
         qlit = as_query_literal(query, constants) if query is not None else None
+        blits = (tuple(as_query_literal(b, constants) for b in batch)
+                 if batch is not None else None)
         self.magic = magic
         self.plan: ProgramPlan = plan_program(
-            program, PlanOptions(query=qlit, magic=magic))
+            program, PlanOptions(query=qlit, batch=blits, magic=magic))
         # groups/facts reference the post-pass (possibly magic-rewritten) rules
         self.program = self.plan.rewritten
         self.bits = bits
@@ -465,13 +500,33 @@ class Engine:
         self._index_cache: dict[tuple[str, tuple[int, ...]], EdbIndex] = {}
         self._pred_info = {p: info for gp in self.plan.groups
                            for p, info in gp.preds.items()}
+        self._warm: dict[str, tuple[np.ndarray, np.ndarray | None]] = {}
+        self._batch_out: list | None = None
 
     # -- public API ----------------------------------------------------------
 
-    def run(self) -> "Engine":
-        for gp in self.plan.groups:
-            self._eval_group(gp)
-        if self.plan.query_pred is not None:
+    def run(self, warm: dict[str, tuple] | None = None) -> "Engine":
+        """Evaluate all strata.  ``warm`` maps predicate -> previously
+        materialized (rows, values): monotone tables re-enter the fixpoint
+        from that lower bound (appends resume from the delta frontier instead
+        of recomputing — see ``seminaive.pack_warm_rows``).  Warm-starting is
+        only sound for programs monotone under appends (no negation, no
+        additive aggregates) — anything else raises rather than silently
+        double-billing warm counts or keeping refuted facts."""
+        if warm and not self.program.monotone_under_appends():
+            raise PlanError(
+                "run(warm=) on a program with negation or count/sum "
+                "aggregates is unsound (warm rows would re-merge into "
+                "additive totals / keep non-monotone facts); re-run cold")
+        self._warm = dict(warm or {})
+        try:
+            for gp in self.plan.groups:
+                self._eval_group(gp)
+        finally:
+            self._warm = {}
+        if self.plan.options.batch is not None:
+            self._finalize_batch()
+        elif self.plan.query_pred is not None:
             self._finalize_query()
         return self
 
@@ -560,6 +615,92 @@ class Engine:
             iterations=int(res.iterations), generated=int(res.generated))
         return out
 
+    def ask_batch(self, queries: list | None = None, verify: bool = False,
+                  caps: dict[str, int] | None = None,
+                  default_cap: int | None = None,
+                  join_cap: int | None = None) -> list:
+        """Answer B queries, coalescing same-(pred, adornment)-shape groups
+        into ONE tuple-path fixpoint via the qid-tagged magic rewrite.
+
+        ``queries`` defaults to the program's own ``?-`` goals.  Answers come
+        back in query order; each equals the corresponding ``ask()``.  Shapes
+        that do not admit per-seed attribution (all-free adornments, packed-
+        width overflow, non-magic plans) fall back to sequential ``ask()``.
+        """
+        specs = list(queries) if queries is not None else \
+            list(self.source_program.queries)
+        qlits = [as_query_literal(s) for s in specs]
+        out: list = [None] * len(qlits)
+        kw = dict(caps=caps, default_cap=default_cap, join_cap=join_cap)
+        groups: dict[tuple[str, str], list[int]] = {}
+        for i, q in enumerate(qlits):
+            if q.pred in self.db:  # EDB query: a pure selection
+                rows = self.db[q.pred]
+                out[i] = rows[query_row_mask(q, rows, None)]
+                continue
+            adn = batch_adornment(self.source_program, q)
+            groups.setdefault((q.pred, adn), []).append(i)
+        verify_full = None  # ONE full-model engine checks the whole batch
+        for (pred, adn), idxs in groups.items():
+            res = None
+            if len(idxs) > 1 and "b" in adn and self.magic:
+                res = self._try_batch([qlits[i] for i in idxs], **kw)
+            if res is None:
+                res = [self.ask(qlits[i], verify=verify, **kw) for i in idxs]
+            elif verify:
+                info_agg = self._batch_is_agg(pred)
+                if verify_full is None:
+                    verify_full = Engine(
+                        self.source_program, db=self.db, bits=self.bits,
+                        caps=self.caps, default_cap=self.default_cap,
+                        join_cap=self.join_cap, max_iters=self.max_iters).run()
+                for i, r in zip(idxs, res):
+                    self._verify_ask(qlits[i], r, info_agg, full=verify_full)
+            for i, r in zip(idxs, res):
+                out[i] = r
+        return out
+
+    def _batch_is_agg(self, pred: str) -> bool:
+        return any(r.agg is not None
+                   for r in self.source_program.rules_for(pred))
+
+    def _try_batch(self, batch: list[Literal], caps=None, default_cap=None,
+                   join_cap=None) -> list | None:
+        """One qid-tagged fixpoint for a same-shape batch, or None when the
+        shape must evaluate sequentially (not batchable / won't pack / table
+        overflow under the union of demands)."""
+        try:
+            sub = Engine(self.source_program, db=self.db, bits=self.bits,
+                         caps=self.caps if caps is None else caps,
+                         default_cap=default_cap or self.default_cap,
+                         join_cap=join_cap or self.join_cap,
+                         max_iters=self.max_iters, batch=batch)
+            sub.run()
+        except (PlanError, MagicError, ValueError, CapacityError):
+            # ValueError covers packed-width overflow (qid column pushes the
+            # schema past 62 bits) and out-of-domain seed constants
+            return None
+        for k, v in sub.stats.items():
+            if k not in self.materialized:
+                self.stats[k] = v
+        return sub.batch_results()
+
+    def batch_results(self) -> list:
+        """Per-query answers of a batch-planned engine, in batch order."""
+        if self._batch_out is None:
+            raise RuntimeError("engine has no batch plan or run() not called")
+        return self._batch_out
+
+    def _finalize_batch(self):
+        """Split the qid-tagged query predicate into per-query answers
+        (:func:`split_qid_answers`)."""
+        qp = self.plan.query_pred
+        info = self._pred_info[qp]
+        rows, vals = self.materialized.get(
+            qp, (np.zeros((0, info.key_arity), np.int64), None))
+        self._batch_out = split_qid_answers(
+            qp, rows, vals, info, self.plan.options.batch)
+
     def _query_engine(self, q: Literal, caps=None, default_cap=None,
                       join_cap=None) -> "Engine":
         kwargs = dict(db=self.db, bits=self.bits,
@@ -574,13 +715,15 @@ class Engine:
             # magic prefixes) fall back to demanded-strata + residual filter
             return Engine(self.source_program, query=q, magic=False, **kwargs)
 
-    def _verify_ask(self, q: Literal, got, is_agg: bool):
-        if q.pred in self.materialized:
-            full = self
-        else:
-            full = Engine(self.source_program, db=self.db, bits=self.bits,
-                          caps=self.caps, default_cap=self.default_cap,
-                          join_cap=self.join_cap, max_iters=self.max_iters).run()
+    def _verify_ask(self, q: Literal, got, is_agg: bool, full: "Engine | None" = None):
+        if full is None:
+            if q.pred in self.materialized:
+                full = self
+            else:
+                full = Engine(self.source_program, db=self.db, bits=self.bits,
+                              caps=self.caps, default_cap=self.default_cap,
+                              join_cap=self.join_cap,
+                              max_iters=self.max_iters).run()
         info = full._pred_info[q.pred]
         if is_agg:
             rows, vals = full.query_agg(q.pred)
@@ -720,23 +863,36 @@ class Engine:
     def _gather_facts(self, gp: GroupPlan):
         """Pack the group's fact rows (incl. magic seed facts) per predicate.
         Packed keys are jit arguments, so queries differing only in their
-        seed constants share one compiled runner."""
+        seed constants share one compiled runner.  Warm-start rows (a
+        previously materialized monotone model, see ``run(warm=)``) merge in
+        as extra facts: the fixpoint re-enters from that lower bound."""
         limit = (1 << self.bits) - 1
         out = {}
         for pred, info in gp.preds.items():
             facts = [r for r in self.program.rules_for(pred) if r.is_fact()]
-            if not facts:
-                continue
-            rows = np.array([[a.value for a in r.head.args] for r in facts], np.int64)
-            key_cols = [i for i in range(rows.shape[1])
-                        if not (info.is_agg and i == info.agg_pos)]
-            kv = rows[:, key_cols]
-            if kv.size and (kv.min() < 0 or kv.max() > limit):
-                raise ValueError(
-                    f"fact/query constant for {pred!r} exceeds the "
-                    f"{self.bits}-bit packed domain (packing would "
-                    f"silently truncate)")
-            out[pred] = self._pack_rows(rows, info)
+            if facts:
+                rows = np.array([[a.value for a in r.head.args] for r in facts], np.int64)
+                key_cols = [i for i in range(rows.shape[1])
+                            if not (info.is_agg and i == info.agg_pos)]
+                kv = rows[:, key_cols]
+                if kv.size and (kv.min() < 0 or kv.max() > limit):
+                    raise ValueError(
+                        f"fact/query constant for {pred!r} exceeds the "
+                        f"{self.bits}-bit packed domain (packing would "
+                        f"silently truncate)")
+                out[pred] = self._pack_rows(rows, info)
+            if pred in self._warm:
+                wrows, wvals = self._warm[pred]
+                init = None
+                if info.is_agg:
+                    init = _MERGE_INIT["min" if info.agg == "min" else
+                                       "max" if info.agg == "max" else "sum"]
+                wk, wv = pack_warm_rows(wrows, wvals, self._schema(info), init)
+                if pred in out:
+                    fk, fv = out[pred]
+                    wk = jnp.concatenate([fk, wk])
+                    wv = jnp.concatenate([fv, wv]) if wv is not None else None
+                out[pred] = (wk, wv)
         return out
 
     def _eval_group(self, gp: GroupPlan):

@@ -41,6 +41,14 @@ def fresh_var(prefix: str = "_V") -> Var:
     return Var(f"{prefix}{next(_fresh)}")
 
 
+#: Reserved variable name threading the *query-id column* of a batched
+#: demand rewrite (``magic.attribute_qids``) through adorned/magic rules.
+#: Fixed (not ``fresh_var``) on purpose: compiled-rule reprs are the engine's
+#: runner-cache keys, so two services building the same batched template must
+#: produce byte-identical plans to share one compiled fixpoint.
+QID_VAR = "__qid"
+
+
 # ---------------------------------------------------------------------------
 # Body goals
 # ---------------------------------------------------------------------------
@@ -58,6 +66,10 @@ class Literal:
 
     def vars(self) -> list[Var]:
         return [a for a in self.args if isinstance(a, Var)]
+
+    def with_prefix(self, term: Term) -> "Literal":
+        """This literal with one extra leading argument (qid threading)."""
+        return Literal(self.pred, (term,) + self.args, self.negated)
 
     def __repr__(self):
         neg = "~" if self.negated else ""
@@ -116,6 +128,11 @@ class AggSpec:
     def __post_init__(self):
         assert self.kind in AGG_KINDS, self.kind
 
+    def shifted(self, by: int = 1) -> "AggSpec":
+        """The same aggregate after ``by`` columns were prepended to the head
+        (the value position moves right under qid threading)."""
+        return AggSpec(self.kind, self.position + by)
+
 
 @dataclasses.dataclass(frozen=True)
 class Rule:
@@ -170,6 +187,19 @@ class Program:
 
     def rules_for(self, pred: str) -> list[Rule]:
         return [r for r in self.rules if r.head.pred == pred]
+
+    def monotone_under_appends(self) -> bool:
+        """Is a previously-materialized model a sound warm-start after EDB
+        appends?  Negation makes derived facts non-monotone in the appended
+        relation, and additive aggregates (count/sum) would double-bill warm
+        totals on re-derivation; plain sets and idempotent lattice merges
+        (min/max) re-converge to the exact post-append least fixpoint."""
+        for r in self.rules:
+            if any(l.negated for l in r.body_literals()):
+                return False
+            if r.agg is not None and r.agg.kind not in ("min", "max"):
+                return False
+        return True
 
     def __repr__(self):
         lines = [repr(r) for r in self.rules]

@@ -31,7 +31,8 @@ from __future__ import annotations
 
 import dataclasses
 
-from .ir import Arith, Comparison, Const, Goal, Literal, Program, Rule, Var
+from .ir import (QID_VAR, Arith, Comparison, Const, Goal, Literal, Program,
+                 Rule, Var)
 
 BOUND, FREE = "b", "f"
 
@@ -73,14 +74,22 @@ class MagicRewrite:
     #: query binds nothing).  The serving layer swaps this single rule for a
     #: seed-EDB rule so one rewrite/plan serves every query of the adornment.
     seed_rule: "Rule | None" = None
+    #: True once :func:`attribute_qids` threaded a query-id column: every
+    #: adorned/magic predicate carries a leading qid argument and the query
+    #: predicate's answers split per-query on that column.
+    qid: bool = False
 
 
-def _agg_positions(program: Program) -> dict[str, int]:
+def agg_positions(program: Program) -> dict[str, int]:
+    """Aggregate value position per predicate (absent = plain set)."""
     out: dict[str, int] = {}
     for r in program.rules:
         if r.agg is not None:
             out[r.head.pred] = r.agg.position
     return out
+
+
+_agg_positions = agg_positions  # internal alias (pre-PR-4 name)
 
 
 def _literal_adornment(lit: Literal, bound: set[str], agg_pos: int) -> str:
@@ -273,6 +282,97 @@ def rewrite(program: Program, query: Literal) -> MagicRewrite:
         residual_filters=residual,
         seed_rule=seed_rule,
     )
+
+
+# ---------------------------------------------------------------------------
+# Per-seed attribution: thread a query-id column through a magic rewrite so
+# ONE bottom-up fixpoint evaluates the union of B demands and the answers
+# split back per query.  (ROADMAP "Batched tuple-path queries".)
+# ---------------------------------------------------------------------------
+
+
+def _adn_of(name: str) -> str:
+    return name.rsplit("__", 1)[1]
+
+
+def qid_batchable(mr: MagicRewrite) -> bool:
+    """Does this rewrite admit the query-id column?
+
+    Requires every adorned/magic predicate to participate in demand flow —
+    i.e. carry at least one bound slot.  Then every adorned rule (facts
+    included) is guarded by a magic literal and every magic rule derives from
+    one, so the qid variable is bound in every rule body and tagged
+    derivations stay confined to the demand that caused them.  All-free
+    adornments (negated IDB literals, unbound queries) have no demand source
+    to take a qid from — those shapes fall back to sequential evaluation.
+    """
+    if mr.seed_rule is None or BOUND not in mr.adornment:
+        return False
+    return all(BOUND in _adn_of(name) for name in mr.aliases)
+
+
+def attribute_qids(
+    mr: MagicRewrite,
+    seed_rel: str | None = None,
+    seed_rows: "list[tuple[int, ...]] | None" = None,
+) -> MagicRewrite:
+    """Thread a query-id column through a magic rewrite.
+
+    Every adorned/magic predicate gains a leading qid argument; within each
+    rule one shared qid variable joins the head and every adorned/magic body
+    literal, so the model restricted to ``qid = k`` is isomorphic to the
+    single-query magic program seeded with query k's constants.  B demands
+    evaluate in ONE semi-naive fixpoint (shared plan, shared EDB indexes,
+    shared iteration schedule) and finalization splits answers on the qid.
+
+    The original seed fact is dropped and replaced by:
+
+    * ``seed_rel`` — a seed-EDB rule ``m__p__adn(Q, S..) <- seed_rel(Q, S..)``
+      so a resident service swaps seed *rows* per batch without replanning
+      (row counts quantize to power-of-two buckets inside the engine, so warm
+      batch sizes reuse compiled fixpoints); and/or
+    * ``seed_rows`` — inline ``(qid, consts..)`` facts for one-shot
+      ``Engine.ask_batch`` evaluation.
+
+    Raises :class:`MagicError` when the rewrite is not :func:`qid_batchable`.
+    """
+    if not qid_batchable(mr):
+        raise MagicError(
+            f"rewrite of {mr.query!r} is not qid-batchable (an all-free "
+            "adornment has no demand source for the query-id column)")
+    tagged = set(mr.aliases)
+    qv = Var(QID_VAR)
+    for r in mr.program.rules:
+        names = {v.name for g in (r.head, *r.body)
+                 for v in (g.vars() if hasattr(g, "vars") else [])}
+        if QID_VAR in names:
+            raise MagicError(f"program already uses reserved var {QID_VAR!r}")
+
+    def tag(g: Goal) -> Goal:
+        if isinstance(g, Literal) and g.pred in tagged:
+            return g.with_prefix(qv)
+        return g
+
+    rules: list[Rule] = []
+    for r in mr.program.rules:
+        if r is mr.seed_rule:
+            continue  # replaced by the seed-EDB rule / inline seed facts
+        agg = r.agg
+        if agg is not None and r.head.pred in tagged:
+            agg = agg.shifted(1)
+        rules.append(Rule(tag(r.head), tuple(tag(g) for g in r.body), agg))
+
+    seed_pred = mr.seed_rule.head.pred
+    if seed_rel is not None:
+        svars = tuple(Var(f"__s{i}") for i in range(len(mr.seed_rule.head.args)))
+        rules.append(Rule(Literal(seed_pred, (qv,) + svars),
+                          (Literal(seed_rel, (qv,) + svars),)))
+    for row in seed_rows or ():
+        rules.append(Rule(
+            Literal(seed_pred, tuple(Const(int(v)) for v in row)), ()))
+
+    return dataclasses.replace(
+        mr, program=Program(rules), qid=True, seed_rule=None)
 
 
 # ---------------------------------------------------------------------------

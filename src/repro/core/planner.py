@@ -129,6 +129,12 @@ class PlanOptions:
 
     ``query``   — a query goal (constants = bound); enables demand-driven
                   rewriting and result restriction.
+    ``batch``   — B same-shape query goals (same predicate, same adornment);
+                  plans the magic rewrite with a query-id column threaded
+                  through every adorned/magic predicate so ONE fixpoint
+                  evaluates the union of the B demands and finalization
+                  splits the answers per query.  Mutually exclusive with
+                  ``query``.
     ``magic``   — apply the magic-sets rewrite for the query (otherwise only
                   the demanded strata are evaluated and constants filter the
                   result).
@@ -137,6 +143,7 @@ class PlanOptions:
     """
 
     query: Literal | None = None
+    batch: tuple[Literal, ...] | None = None
     magic: bool = True
     push_constants: bool = True
 
@@ -467,7 +474,11 @@ def pass_normalize(program: Program, options: PlanOptions) -> Program:
 def pass_rewrite(program: Program, options: PlanOptions) -> tuple[Program, MagicRewrite | None, str]:
     """Demand-driven rewriting.  With a query and ``magic=True``, apply the
     magic-sets rewrite; with ``magic=False``, restrict to the demanded strata
-    (rules transitively reachable from the query predicate)."""
+    (rules transitively reachable from the query predicate).  With a
+    ``batch``, the magic rewrite additionally threads a query-id column
+    (``magic.attribute_qids``) and materializes one tagged seed per query."""
+    if options.batch is not None:
+        return _rewrite_batch(program, options)
     if options.query is None:
         return program, None, "rewrite(none)"
     q = options.query
@@ -483,6 +494,48 @@ def pass_rewrite(program: Program, options: PlanOptions) -> tuple[Program, Magic
             raise PlanError(str(e)) from e
         return mr.program, mr, "rewrite(magic)"
     return demanded_strata(program, options.query.pred), None, "rewrite(demand)"
+
+
+def batch_adornment(program: Program, q: Literal) -> str:
+    """The (pred, adornment) shape key of a query goal — batches coalesce on
+    identical shapes only (shared by ``Engine.ask_batch`` and the service's
+    tuple-batch router so the two agree on what may share a fixpoint)."""
+    from .magic import agg_positions, query_adornment
+    return query_adornment(q, agg_positions(program).get(q.pred, -1))
+
+
+def _rewrite_batch(program: Program, options: PlanOptions):
+    from .magic import attribute_qids, qid_batchable
+    batch = options.batch
+    if not batch:
+        raise PlanError("empty query batch")
+    if not options.magic:
+        raise PlanError(
+            "batch planning requires the magic rewrite (per-seed attribution "
+            "tags the magic seeds); with magic=False evaluate sequentially")
+    q0 = batch[0]
+    adn = batch_adornment(program, q0)
+    for q in batch[1:]:
+        if q.pred != q0.pred or batch_adornment(program, q) != adn:
+            raise PlanError(
+                f"mixed-shape batch: {q!r} does not share the "
+                f"({q0.pred}, {adn}) shape of {q0!r}")
+    try:
+        mr = magic_rewrite(program, q0)
+    except MagicError as e:
+        raise PlanError(str(e)) from e
+    if not qid_batchable(mr):
+        raise PlanError(
+            f"({q0.pred}, {adn}) does not admit per-seed attribution "
+            "(all-free adornment in the rewrite); evaluate sequentially")
+    bound = [i for i, c in enumerate(adn) if c == "b"]
+    seeds = [(qid,) + tuple(int(q.args[i].value) for i in bound)
+             for qid, q in enumerate(batch)]
+    try:
+        mr = attribute_qids(mr, seed_rows=seeds)
+    except MagicError as e:
+        raise PlanError(str(e)) from e
+    return mr.program, mr, "rewrite(magic+qid)"
 
 
 def demanded_strata(program: Program, pred: str) -> Program:

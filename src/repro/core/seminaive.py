@@ -273,6 +273,40 @@ def quantize_rows(n: int, minimum: int = 8) -> int:
     return 1 << (n - 1).bit_length()
 
 
+def pack_warm_rows(rows: np.ndarray, vals: np.ndarray | None, schema: Schema,
+                   agg_init: int | None = None):
+    """Pack previously-materialized rows for *warm-starting* a later fixpoint.
+
+    Monotone tables make any earlier model a valid lower bound of the
+    post-append model (the SetRDD restart argument), so an appended engine can
+    re-enter the fixpoint from ``prev ∪ exit(T_new)`` instead of from scratch
+    — convergence then costs the *delta's* propagation depth.  Rows pack to
+    sorted int64 keys, EMPTY-padded to a :func:`quantize_rows` bucket so the
+    warm arrays hit already-compiled fixpoint shapes as the model grows.
+    """
+    n = len(rows)
+    cap = quantize_rows(max(n, 1))
+    keys = np.full((cap,), np.iinfo(np.int64).max, np.int64)
+    if n:
+        rows = np.asarray(rows, np.int64)
+        for c, hi in enumerate(schema.max_values()):
+            col = rows[:, c]
+            if col.min() < 0 or col.max() > hi:
+                raise ValueError(
+                    f"warm rows exceed the packed domain in column {c} "
+                    f"(max {hi}); packing would silently truncate")
+        packed = np.zeros((n,), np.int64)
+        for c, shift in enumerate(schema.shifts):
+            packed |= rows[:, c] << shift
+        keys[:n] = packed
+    if vals is None:
+        return jnp.asarray(keys), None
+    v = np.full((cap,), agg_init, np.int32)
+    if n:
+        v[:n] = np.asarray(vals, np.int32)
+    return jnp.asarray(keys), jnp.asarray(v)
+
+
 def build_edb_index(rows: np.ndarray, key_cols: tuple[int, ...], schema_bits: int) -> EdbIndex:
     rows = np.asarray(rows, np.int64)
     if rows.ndim == 1:  # single-column relation (reshape(-1) chokes on 0 rows)

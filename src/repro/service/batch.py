@@ -34,6 +34,19 @@ def pad_batch_size(b: int, pads: tuple[int, ...]) -> int:
     return ((b + top - 1) // top) * top
 
 
+def coalesce_by_shape(items: list, shape_of) -> dict:
+    """Group (index, query) pairs by ``shape_of(query)``, preserving order.
+
+    The tuple-path analog of the dense per-predicate grouping above: queries
+    sharing a (pred, adornment) shape may share one qid-tagged fixpoint
+    (their demands share a seed schema); mixed shapes must NOT coalesce.
+    """
+    groups: dict = {}
+    for i, q in items:
+        groups.setdefault(shape_of(q), []).append((i, q))
+    return groups
+
+
 def run_frontier_batch(
     sr: Semiring,
     matrix: jax.Array,

@@ -30,6 +30,11 @@ class CacheEntry:
     epoch: int  # service append-epoch the answer is valid for
     src: int | None = None  # dense: the bound pivot (source vertex)
     raw: Any = None  # dense: (n_alloc,) closure row in the semiring carrier
+    #: times this entry served a query since it was (re)computed — the
+    #: eviction-aware append-resume policy refreshes hot entries and drops
+    #: the cold tail instead of paying maintenance for answers nobody asks
+    #: for (``DatalogService(resume_min_hits=...)``)
+    hits: int = 0
 
 
 class LRUCache:
@@ -60,7 +65,13 @@ class LRUCache:
             return None
         self._entries.move_to_end(key)
         self.hits += 1
+        ent.hits += 1
         return ent
+
+    def peek(self, key: Hashable) -> CacheEntry | None:
+        """Read an entry without touching LRU order or hit/miss counters —
+        for maintenance passes (append-resume policy), not serving."""
+        return self._entries.get(key)
 
     def put(self, key: Hashable, entry: CacheEntry) -> None:
         if self.capacity <= 0:

@@ -21,10 +21,13 @@ so the inflationary iteration converges to exactly the new least fixpoint.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.ir import Literal, Program
 from ..core.semiring import Semiring
 
 
@@ -61,3 +64,47 @@ def pad_rows(rows: jax.Array, n_alloc: int, zero) -> jax.Array:
     if grow <= 0:
         return rows
     return jnp.pad(rows, ((0, 0), (0, grow)), constant_values=zero)
+
+
+# ---------------------------------------------------------------------------
+# Tuple-path resumption: snapshot a batched template's fixpoint state
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TupleSnapshot:
+    """A batched tuple template's last fixpoint state, for append-resume.
+
+    The PSN tables are monotone, so every materialized relation of the last
+    run (adorned + magic predicates alike — demands also only grow under
+    appends) is a valid lower bound of the post-append model *for the same
+    seed rows*.  On a monotone append the service re-runs the template with
+    identical seeds, warm-started from ``state`` (``Engine.run(warm=)``):
+    the fixpoint converges in the delta's propagation depth and the per-qid
+    cache entries refresh instead of invalidating.
+    """
+
+    seeds: np.ndarray  # (B, 1 + n_bound) qid-tagged seed rows
+    qlits: list[Literal]  # the batch's query goals, qid order
+    state: dict[str, tuple[np.ndarray, np.ndarray | None]]  # pred -> model
+
+
+def resumable_program(program: Program) -> bool:
+    """Is warm-starting sound for this (rewritten) program under monotone
+    EDB appends?  Delegates to :meth:`Program.monotone_under_appends` — the
+    same predicate ``Engine.run(warm=)`` enforces, checked here *before*
+    building a snapshot so unresumable templates never carry state."""
+    return program.monotone_under_appends()
+
+
+def partition_resumable(entries: list, min_hits: int) -> tuple[list, list]:
+    """Split cached (key, entry) pairs into (resume, drop) under the
+    hit-count policy: with ``min_hits <= 0`` every entry resumes (the
+    default, maintenance-free-cache behavior); otherwise only entries that
+    served at least ``min_hits`` queries since their last (re)compute stay
+    warm and the cold tail is evicted rather than recomputed."""
+    if min_hits <= 0:
+        return list(entries), []
+    hot = [(k, e) for k, e in entries if e.hits >= min_hits]
+    cold = [(k, e) for k, e in entries if e.hits < min_hits]
+    return hot, cold

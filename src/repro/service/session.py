@@ -32,10 +32,12 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.engine import Engine, as_query_literal, query_row_mask
+from ..core.engine import (CapacityError, Engine, as_query_literal,
+                           query_row_mask, split_qid_answers)
 from ..core.ir import Const, Literal, Program, Rule, Var, fresh_var
-from ..core.magic import (BOUND, FrontierLowering, MagicError,
-                          detect_frontier_lowering, frontier_query_source,
+from ..core.magic import (BOUND, FrontierLowering, MagicError, agg_positions,
+                          attribute_qids, detect_frontier_lowering,
+                          frontier_query_source, qid_batchable,
                           query_adornment)
 from ..core.magic import rewrite as magic_rewrite
 from ..core.parser import parse_program
@@ -56,8 +58,12 @@ class ServiceStats:
     tuple_runs: int = 0  # PSN evaluations (template engine runs)
     dense_fixpoints: int = 0  # batched dense fixpoints launched
     batched_queries: int = 0  # queries answered by those fixpoints
+    tuple_fixpoints: int = 0  # qid-batched tuple fixpoints launched
+    tuple_batched_queries: int = 0  # queries answered by those fixpoints
     appends: int = 0
     resumed_rows: int = 0  # cached closures refreshed by append-resume
+    resumed_tuple_rows: int = 0  # tuple answers refreshed by snapshot resume
+    dropped_cold: int = 0  # cold entries evicted instead of resumed
 
 
 def _freeze(res):
@@ -140,19 +146,25 @@ class _QueryTemplate:
         self.bound_positions = [i for i, c in enumerate(adn) if c == BOUND]
         self.seed_rel = f"__qseed_{q.pred}__{adn}"
         self._model_fresh = False
-        eng_kw = dict(bits=svc.bits, default_cap=svc.default_cap,
-                      join_cap=svc.join_cap, max_iters=svc.max_iters)
+        self._mr = None
+        self._qid_engine: Engine | None = None
+        self._snap: _inc.TupleSnapshot | None = None
+        self._eng_kw = eng_kw = dict(bits=svc.bits, default_cap=svc.default_cap,
+                                     join_cap=svc.join_cap,
+                                     max_iters=svc.max_iters)
         try:
             mr = magic_rewrite(svc.program, q)
             caps = dict(svc.caps)
             for name, orig in mr.aliases.items():
                 if orig in svc.caps:
                     caps.setdefault(name, svc.caps[orig])
+            self._caps = caps
             db = dict(svc.db)
             if mr.seed_rule is not None:
                 db[self.seed_rel] = np.zeros((1, len(self.bound_positions)),
                                              np.int64)
             self.mode = "magic"
+            self._mr = mr
             self.result_pred = mr.query_pred
             self.engine = Engine(self._parameterize(mr), db=db, caps=caps,
                                  **eng_kw)
@@ -161,6 +173,16 @@ class _QueryTemplate:
             self.result_pred = q.pred
             self.engine = Engine(demanded_strata(svc.program, q.pred),
                                  db=dict(svc.db), caps=dict(svc.caps), **eng_kw)
+        #: EDB relations this template's (rewritten) program actually reads —
+        #: appends to anything else leave its answers untouched
+        self.reads = set(self.engine.source_program.edb_predicates())
+        #: can run_batch coalesce B queries of this shape into one qid-tagged
+        #: fixpoint?  Needs the magic mode and a demand-flow-complete rewrite.
+        self.batchable = self.mode == "magic" and qid_batchable(self._mr)
+        #: is warm-start resumption of the batched fixpoint sound under
+        #: monotone appends?  (no negation, no additive aggregates)
+        self.resumable = (self.batchable
+                          and _inc.resumable_program(self._mr.program))
 
     def _parameterize(self, mr) -> Program:
         rules, dropped = [], False
@@ -201,12 +223,92 @@ class _QueryTemplate:
             return rows[mask], vals[mask]
         return rows[mask]
 
+    # -- qid-batched evaluation ---------------------------------------------
+
+    def _ensure_qid_engine(self, svc: "DatalogService") -> Engine:
+        """Build (once) the batched twin: the same magic rewrite with a
+        query-id column threaded through (``magic.attribute_qids``) and the
+        seed EDB widened to (qid, consts..) rows.  Seed row counts quantize
+        to power-of-two buckets inside the engine, so warm batch *sizes*
+        reuse compiled fixpoints."""
+        if self._qid_engine is None:
+            prog = attribute_qids(self._mr, seed_rel=self.seed_rel)
+            db = dict(svc.db)
+            db[self.seed_rel] = np.zeros(
+                (1, 1 + len(self.bound_positions)), np.int64)
+            self._qid_engine = Engine(prog.program, db=db, caps=self._caps,
+                                      **self._eng_kw)
+        return self._qid_engine
+
+    def run_batch(self, svc: "DatalogService", qlits: list[Literal]) -> list:
+        """Evaluate B same-shape queries as ONE tuple-path fixpoint; returns
+        per-query answers in order.  Raises (PlanError/CapacityError/
+        ValueError) when the batch cannot run batched — callers fall back to
+        sequential ``run``."""
+        eng = self._ensure_qid_engine(svc)
+        seeds = np.asarray(
+            [[qid] + [int(q.args[i].value) for i in self.bound_positions]
+             for qid, q in enumerate(qlits)], np.int64)
+        eng.db[self.seed_rel] = seeds
+        eng.invalidate(self.seed_rel)
+        eng.run()
+        out = self._split(eng, qlits)
+        self._snap = _inc.TupleSnapshot(
+            seeds=seeds, qlits=list(qlits),
+            state=dict(eng.materialized)) if self.resumable else None
+        return out
+
+    def _split(self, eng: Engine, qlits: list[Literal], qids=None) -> list:
+        """Per-seed attribution (``engine.split_qid_answers``): the qid
+        column selects the query, then the query's own constants / repeated
+        variables filter (same semantics as ``_filter``)."""
+        rows, vals = eng.materialized[self.result_pred]
+        info = eng._pred_info[self.result_pred]
+        return split_qid_answers(self.result_pred, rows, vals, info, qlits,
+                                 qids=qids)
+
+    def resume_batch(self, svc: "DatalogService",
+                     keep: list[int] | None = None) -> list | None:
+        """Re-run the last batch warm-started from its snapshot (same seeds,
+        post-append EDB); returns [(qlit, answer)] for the cache refresh, or
+        None when there is nothing to resume.
+
+        ``keep`` restricts the resume to those snapshot positions (the
+        eviction-aware policy's hot entries): cold seeds and their warm rows
+        are filtered OUT of the re-entered fixpoint and the new snapshot, so
+        future appends never pay their demand propagation again.
+        """
+        if self._snap is None or not self.resumable:
+            return None
+        snap = self._snap
+        idx = list(range(len(snap.qlits))) if keep is None else sorted(keep)
+        seeds = snap.seeds[idx]
+        qids = [int(q) for q in seeds[:, 0]]  # original tags, non-contiguous
+        qlits = [snap.qlits[i] for i in idx]
+        state = snap.state
+        if len(idx) < len(snap.qlits):
+            state = {}
+            for p, (rows, vals) in snap.state.items():
+                m = np.isin(rows[:, 0], qids)
+                state[p] = (rows[m], vals[m] if vals is not None else None)
+        eng = self._qid_engine
+        eng.db[self.seed_rel] = seeds
+        eng.invalidate(self.seed_rel)
+        eng.run(warm=state)
+        out = self._split(eng, qlits, qids=qids)
+        self._snap = _inc.TupleSnapshot(
+            seeds=seeds, qlits=qlits, state=dict(eng.materialized))
+        return list(zip(qlits, out))
+
     def on_append(self, svc: "DatalogService", rel: str):
-        if rel not in self.engine.db:
-            return
-        self.engine.db[rel] = svc.db[rel]
-        self.engine.invalidate(rel)
+        for eng in (self.engine, self._qid_engine):
+            if eng is None or rel not in eng.db:
+                continue
+            eng.db[rel] = svc.db[rel]
+            eng.invalidate(rel)
         self._model_fresh = False
+        if not self.resumable:
+            self._snap = None
 
 
 class DatalogService:
@@ -224,6 +326,11 @@ class DatalogService:
                       already-compiled fixpoint shapes.
     ``n_align``       dense domain-size alignment (appends that stay under
                       the allocation keep compiled shapes stable).
+    ``resume_min_hits``  eviction-aware append resume: cached entries that
+                      served fewer than this many queries since their last
+                      (re)compute are *dropped* on append instead of
+                      resumed (0 = resume everything, the maintenance-free
+                      default).
     """
 
     def __init__(self, program, db: dict[str, np.ndarray], *, bits: int = 18,
@@ -232,7 +339,7 @@ class DatalogService:
                  constants: dict[str, int] | None = None,
                  result_cache: int = 1024, matmul=None, mesh=None,
                  batch_pads: tuple[int, ...] = (1, 8, 32, 128),
-                 n_align: int = 128):
+                 n_align: int = 128, resume_min_hits: int = 0):
         if isinstance(program, str):
             program = parse_program(program, constants=constants)
         self.program = program
@@ -244,6 +351,7 @@ class DatalogService:
         self.mesh = mesh
         self.batch_pads = tuple(batch_pads)
         self.n_align = n_align
+        self.resume_min_hits = resume_min_hits
         self._matmul_opt = matmul
         # the base engine owns db normalization + domain validation; sharing
         # its dict means appends propagate without copying
@@ -269,8 +377,11 @@ class DatalogService:
         """Answer a micro-batch of queries; returns answers in order.
 
         Single-source queries on the same decomposable predicate coalesce
-        into one batched dense fixpoint; everything else runs through the
-        memoized tuple templates.  Every answer lands in the result cache.
+        into one batched dense fixpoint; same-(pred, adornment)-shape tuple
+        queries coalesce into one qid-tagged tuple fixpoint (per-seed
+        attribution splits the union back per query); everything else runs
+        through the memoized tuple templates one by one.  Every answer lands
+        in the result cache individually, so later singleton queries hit.
         """
         qlits = [self._as_literal(s) for s in queries]
         out: list = [None] * len(qlits)
@@ -293,14 +404,32 @@ class DatalogService:
                 singles.append((i, q))
         for pred, items in dense.items():
             self._run_dense_batch(pred, items, out)
+        # group tuple queries by (pred, adornment) shape; same-shape groups
+        # of >= 2 distinct queries share one qid-tagged fixpoint.  Mixed
+        # shapes NEVER coalesce (their demands don't share a seed schema).
+        shapes = _batch.coalesce_by_shape(
+            singles, lambda q: (q.pred, self._adorn(q)))
         computed: dict = {}  # dedupe identical tuple queries within the batch
-        for i, q in singles:
-            key = self._cache_key(q)
-            if key not in computed:
-                computed[key] = _freeze(self._ask_tuple(q))
-                self.cache.put(key, CacheEntry("tuple", q.pred, computed[key],
-                                               self.epoch))
-            out[i] = computed[key]
+        for (pred, adn), items in shapes.items():
+            uniq: list[tuple[object, Literal]] = []
+            seen: set = set()  # a cache key pins its shape, so per-group dedup
+            for _, q in items:
+                key = self._cache_key(q)
+                if key not in seen:
+                    seen.add(key)
+                    uniq.append((key, q))
+            results = None
+            if len(uniq) > 1 and BOUND in adn:
+                results = self._run_tuple_batch(pred, adn, uniq)
+            if results is None:  # singleton / unbatchable: sequential path
+                results = {}
+                for key, q in uniq:
+                    results[key] = _freeze(self._ask_tuple(q))
+            for key, res in results.items():
+                computed[key] = res
+                self.cache.put(key, CacheEntry("tuple", pred, res, self.epoch))
+            for i, q in items:
+                out[i] = computed[self._cache_key(q)]
         return out
 
     # -- appends -------------------------------------------------------------
@@ -308,9 +437,10 @@ class DatalogService:
     def append(self, rel: str, rows) -> "DatalogService":
         """Monotone EDB append: add facts, keep serving.
 
-        Tuple-path answers are invalidated; cached dense closures are
-        *resumed* from their previous rows over the appended arc matrix
-        (``incremental.py``) so hot sources stay warm.
+        Cached dense closures and batched tuple-template snapshots are
+        *resumed* from their pre-append state over the appended EDB
+        (``incremental.py``) so hot entries stay warm; everything else (and,
+        under ``resume_min_hits``, the cold tail) is invalidated.
         """
         if rel not in self.db:
             raise ValueError(
@@ -323,7 +453,9 @@ class DatalogService:
         self._base.invalidate(rel)
         for tpl in self._templates.values():
             tpl.on_append(self, rel)
-        self.cache.drop_where(lambda k, e: e.kind == "tuple")
+        refreshed = self._resume_tuple_snapshots(rel)
+        self.cache.drop_where(
+            lambda k, e: e.kind == "tuple" and k not in refreshed)
         for k, e in self.cache.items():
             if e.kind == "dense" and self._lowering(e.pred).edb != rel:
                 e.epoch = self.epoch  # untouched base relation: still valid
@@ -331,6 +463,48 @@ class DatalogService:
             if ds.low.edb == rel:
                 self._refresh_dense(pred, ds, rows)
         return self
+
+    def _resume_tuple_snapshots(self, rel: str) -> dict:
+        """Resume batched tuple templates from their fixpoint snapshots and
+        refresh the per-qid cache entries; returns {cache_key: entry} of the
+        refreshed answers (everything else invalidates).  Honors the
+        ``resume_min_hits`` policy: snapshots none of whose entries are hot
+        are dropped, and only still-cached hot answers refresh."""
+        refreshed: dict = {}
+        for tpl in self._templates.values():
+            if tpl._snap is None:
+                continue
+            keys = [self._cache_key(q) for q in tpl._snap.qlits]
+            cached = [(k, self.cache.peek(k)) for k in keys]
+            if rel not in tpl.reads:
+                # the template's program never reads the appended relation:
+                # its answers are untouched — revalidate, don't re-run
+                for k, e in cached:
+                    if e is not None:
+                        e.epoch = self.epoch
+                        refreshed[k] = e
+                continue
+            hot, cold = _inc.partition_resumable(
+                [((i, k), e) for i, (k, e) in enumerate(cached)
+                 if e is not None], self.resume_min_hits)
+            self.stats.dropped_cold += len(cold)
+            if not hot:
+                tpl._snap = None
+                continue
+            try:
+                # cold positions are filtered out of the resumed fixpoint
+                # (and the next snapshot) entirely — never maintained again
+                pairs = tpl.resume_batch(self, keep=[i for (i, _), _ in hot])
+            except (PlanError, CapacityError, ValueError):
+                tpl._snap = None
+                continue
+            for q, res in pairs:
+                key = self._cache_key(q)
+                ent = CacheEntry("tuple", tpl.pred, _freeze(res), self.epoch)
+                self.cache.replace(key, ent)
+                refreshed[key] = ent
+                self.stats.resumed_tuple_rows += 1
+        return refreshed
 
     # -- introspection -------------------------------------------------------
 
@@ -341,7 +515,9 @@ class DatalogService:
             "cache": {"entries": len(self.cache), "hits": self.cache.hits,
                       "misses": self.cache.misses,
                       "evictions": self.cache.evictions},
-            "templates": sorted(f"{p}/{a}" for p, a in self._templates),
+            "templates": sorted(
+                f"{p}/{a}" + ("+qid" if t.batchable else "")
+                for (p, a), t in self._templates.items()),
             "dense": {p: {"n": ds.n, "n_alloc": ds.n_alloc,
                           "semiring": ds.sr.name}
                       for p, ds in self._dense.items()},
@@ -455,8 +631,13 @@ class DatalogService:
 
     def _refresh_dense(self, pred: str, ds: _DenseRelation, new_rows: np.ndarray):
         grown = ds.append(self, new_rows)
-        entries = [(k, e) for k, e in self.cache.items()
-                   if e.kind == "dense" and e.pred == pred]
+        entries, cold = _inc.partition_resumable(
+            [(k, e) for k, e in self.cache.items()
+             if e.kind == "dense" and e.pred == pred], self.resume_min_hits)
+        if cold:  # eviction-aware resume: drop the cold tail, don't maintain it
+            cold_keys = {k for k, _ in cold}
+            self.stats.dropped_cold += self.cache.drop_where(
+                lambda k, e: k in cold_keys)
         if not entries:
             return
         srcs = [e.src for _, e in entries]
@@ -476,19 +657,43 @@ class DatalogService:
             self.cache.replace(key, CacheEntry(
                 "dense", pred, None, self.epoch, src=e.src, raw=table[j]))
 
-    def _ask_tuple(self, q: Literal):
-        agg_pos = -1
-        for r in self.program.rules_for(q.pred):
-            if r.agg is not None:
-                agg_pos = r.agg.position
-        adn = query_adornment(q, agg_pos)
-        key = (q.pred, adn)
+    def _adorn(self, q: Literal) -> str:
+        return query_adornment(
+            q, agg_positions(self.program).get(q.pred, -1))
+
+    def _template(self, pred: str, adn: str,
+                  q: Literal) -> tuple[_QueryTemplate, bool]:
+        """Memoized template for a shape; returns (template, freshly_built)."""
+        key = (pred, adn)
         tpl = self._templates.get(key)
         if tpl is None:
             tpl = _QueryTemplate(self, q, adn)
             self._templates[key] = tpl
             self.stats.plans_built += 1
-        else:
+            return tpl, True
+        return tpl, False
+
+    def _run_tuple_batch(self, pred: str, adn: str, uniq: list) -> dict | None:
+        """B same-shape tuple queries as ONE qid-tagged fixpoint; returns
+        {cache_key: frozen answer} or None to fall back to sequential runs
+        (shape not batchable, or the union of demands overflowed a table)."""
+        tpl, fresh = self._template(pred, adn, uniq[0][1])
+        if not tpl.batchable:
+            return None
+        try:
+            answers = tpl.run_batch(self, [q for _, q in uniq])
+        except (PlanError, CapacityError, ValueError):
+            return None
+        self.stats.plan_hits += len(uniq) - (1 if fresh else 0)
+        self.stats.tuple_runs += 1
+        self.stats.tuple_fixpoints += 1
+        self.stats.tuple_batched_queries += len(uniq)
+        return {key: _freeze(res) for (key, _), res in zip(uniq, answers)}
+
+    def _ask_tuple(self, q: Literal):
+        adn = self._adorn(q)
+        tpl, fresh = self._template(q.pred, adn, q)
+        if not fresh:
             self.stats.plan_hits += 1
         self.stats.tuple_runs += 1
         return tpl.run(self, q)

@@ -1,0 +1,134 @@
+"""A ~100-line naive-fixpoint reference evaluator over Python sets.
+
+The differential-testing oracle (``test_differential.py``): evaluates a
+Datalog :class:`~repro.core.ir.Program` by repeatedly applying every rule to
+the whole model until nothing changes — no semi-naive deltas, no packed
+tables, no magic sets, no JAX.  Slow and obviously correct, which is the
+point: every optimized evaluation path in the engine/service must agree with
+this one on randomly generated programs, EDBs and queries.
+
+Scope (matches the generators): positive literals, negation over *EDB*
+relations only, comparisons, ``+``/``-`` arithmetic, and ``min``/``max``
+head aggregates with eager lattice merge (the PreM-transferred semantics).
+Additive aggregates (count/sum) are out of scope here.
+
+The model maps each predicate to a set of full literal-position tuples
+(aggregate values sit at their literal position).  ``ref_answer`` filters a
+model by a query goal — constants and repeated variables — mirroring
+``engine.query_row_mask``.
+"""
+from repro.core.ir import Arith, Comparison, Const, Literal, Program, Var
+from repro.core.parser import parse_program
+
+_CMP = {"<": lambda a, b: a < b, "<=": lambda a, b: a <= b,
+        ">": lambda a, b: a > b, ">=": lambda a, b: a >= b,
+        "=": lambda a, b: a == b, "!=": lambda a, b: a != b}
+
+
+def _val(term, env):
+    return term.value if isinstance(term, Const) else env[term.name]
+
+
+def _match(lit, fact, env):
+    """Extend env by unifying a literal's args against a fact tuple."""
+    out = dict(env)
+    for a, v in zip(lit.args, fact):
+        if isinstance(a, Const):
+            if a.value != v:
+                return None
+        elif a.name in out:
+            if out[a.name] != v:
+                return None
+        else:
+            out[a.name] = v
+    return out
+
+
+def _bindings(body, model, env):
+    """All variable environments satisfying the body goals, left to right."""
+    if not body:
+        yield env
+        return
+    g, rest = body[0], body[1:]
+    if isinstance(g, Literal):
+        if g.negated:  # EDB-only negation: no env extension, pure filter
+            probe = tuple(_val(a, env) for a in g.args)
+            if probe not in model.get(g.pred, set()):
+                yield from _bindings(rest, model, env)
+            return
+        for fact in model.get(g.pred, set()):
+            env2 = _match(g, fact, env)
+            if env2 is not None:
+                yield from _bindings(rest, model, env2)
+    elif isinstance(g, Arith):
+        l, r = _val(g.lhs, env), _val(g.rhs, env)
+        res = l + r if g.op == "+" else l - r
+        if g.target.name in env:
+            if env[g.target.name] == res:
+                yield from _bindings(rest, model, env)
+        else:
+            yield from _bindings(rest, model, {**env, g.target.name: res})
+    elif isinstance(g, Comparison):
+        if g.op == "=":  # one unbound side acts as a binding
+            for t, o in ((g.lhs, g.rhs), (g.rhs, g.lhs)):
+                if isinstance(t, Var) and t.name not in env:
+                    yield from _bindings(
+                        rest, model, {**env, t.name: _val(o, env)})
+                    return
+        if _CMP[g.op](_val(g.lhs, env), _val(g.rhs, env)):
+            yield from _bindings(rest, model, env)
+    else:
+        raise TypeError(g)
+
+
+def ref_model(program, db):
+    """Naive fixpoint: {pred: set of full literal-position tuples}."""
+    if isinstance(program, str):
+        program = parse_program(program)
+    model = {rel: {tuple(map(int, row)) for row in rows}
+             for rel, rows in db.items()}
+    aggs = {}  # (pred, group key incl. None at agg pos) -> merged value
+    changed = True
+    while changed:
+        changed = False
+        for rule in program.rules:
+            head, agg = rule.head, rule.agg
+            for env in list(_bindings(list(rule.body), model, {})):
+                tup = tuple(_val(a, env) for a in head.args)
+                if agg is None:
+                    if tup not in model.setdefault(head.pred, set()):
+                        model[head.pred].add(tup)
+                        changed = True
+                    continue
+                key = tup[:agg.position] + (None,) + tup[agg.position + 1:]
+                old = aggs.get((head.pred, key))
+                new = tup[agg.position] if old is None else (
+                    min(old, tup[agg.position]) if agg.kind == "min"
+                    else max(old, tup[agg.position]))
+                if new != old:
+                    aggs[(head.pred, key)] = new
+                    ms = model.setdefault(head.pred, set())
+                    if old is not None:
+                        ms.discard(key[:agg.position] + (old,)
+                                   + key[agg.position + 1:])
+                    ms.add(key[:agg.position] + (new,) + key[agg.position + 1:])
+                    changed = True
+    return model
+
+
+def ref_answer(model, q: Literal) -> set:
+    """Filter a model by a query goal: constants match their position,
+    repeated variables must be pairwise equal (``tc(X, X)``)."""
+    groups = {}
+    for i, a in enumerate(q.args):
+        if isinstance(a, Var):
+            groups.setdefault(a.name, []).append(i)
+    out = set()
+    for fact in model.get(q.pred, set()):
+        if any(isinstance(a, Const) and fact[i] != a.value
+               for i, a in enumerate(q.args)):
+            continue
+        if any(len({fact[i] for i in ps}) != 1 for ps in groups.values()):
+            continue
+        out.add(fact)
+    return out

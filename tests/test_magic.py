@@ -254,9 +254,16 @@ def test_ask_binding_equality_in_magic_prefix():
     assert len(eng.ask("p", (8,), verify=True)) == 0  # 8 only reachable from 7
 
 
-def test_multiple_query_goals_rejected():
+def test_multiple_query_goals():
+    """Same-shape '?-' goals batch into one qid-tagged plan (PR 4); goals of
+    mixed shapes still refuse a single-engine plan."""
+    eng = Engine(TC + "?- tc(1,X).\n?- tc(2,X).",
+                 db={"arc": np.array([[1, 2], [2, 3]])}, default_cap=256).run()
+    r1, r2 = eng.batch_results()
+    assert {tuple(map(int, r)) for r in r1} == {(1, 2), (1, 3)}
+    assert {tuple(map(int, r)) for r in r2} == {(2, 3)}
     with pytest.raises(ValueError):
-        Engine(TC + "?- tc(1,X).\n?- tc(2,X).",
+        Engine(TC + "?- tc(1,X).\n?- tc(X,2).",
                db={"arc": np.array([[1, 2]])})
 
 

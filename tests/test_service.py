@@ -414,6 +414,274 @@ def test_wrong_arity_query_raises():
 
 
 # ---------------------------------------------------------------------------
+# qid-batched tuple fixpoints: B same-shape queries, ONE PSN evaluation
+# ---------------------------------------------------------------------------
+
+
+def test_tuple_batch_one_fixpoint_matches_sequential():
+    """B same-shape sg queries coalesce into one qid-tagged fixpoint whose
+    per-seed answers equal B sequential Engine.ask() calls exactly."""
+    arc = np.array([[0, 2], [0, 3], [1, 4], [1, 5], [2, 6], [3, 7], [4, 8]])
+    svc = DatalogService(SG, db={"arc": arc}, default_cap=4096)
+    eng = Engine(SG, db={"arc": arc}, default_cap=4096)
+    sources = [2, 3, 6, 4]
+    batched = svc.ask_batch([("sg", (s, None)) for s in sources])
+    for s, rows in zip(sources, batched):
+        assert rows_set(rows) == rows_set(eng.ask("sg", (s, None))), s
+    assert svc.stats.tuple_fixpoints == 1
+    assert svc.stats.tuple_batched_queries == len(sources)
+    # per-qid answers were cached individually: singletons now hit
+    h0 = svc.cache.hits
+    svc.ask("sg", (3, None))
+    assert svc.cache.hits == h0 + 1
+
+
+def test_tuple_batch_fully_bound_boolean_queries():
+    """tc(a, b) boolean queries adorn as 'bb': the batch coalesces on the
+    two-column seed schema and each qid answer is the 0/1-row restriction."""
+    svc = DatalogService(SG, db={"arc": np.array(
+        [[0, 2], [0, 3], [2, 6], [3, 7]])}, default_cap=4096)
+    eng = Engine(SG, db={"arc": svc.db["arc"]}, default_cap=4096)
+    pairs = [(2, 3), (6, 7), (2, 6), (3, 2)]
+    batched = svc.ask_batch([("sg", p) for p in pairs])
+    for p, rows in zip(pairs, batched):
+        assert rows_set(rows) == rows_set(eng.ask("sg", p)), p
+    assert rows_set(batched[0]) == {(2, 3)} and len(batched[2]) == 0
+    assert svc.stats.tuple_fixpoints == 1
+    assert svc.stats.tuple_batched_queries == len(pairs)
+
+
+def test_tuple_batch_repeated_variable_queries():
+    """sg(c, X) and sg(c, c') share a shape only when adornments match;
+    sg(X, X) ('ff') never enters a seeded batch.  All answers must equal the
+    sequential path, including the repeated-variable equality filter."""
+    arc = np.array([[0, 1], [1, 2], [2, 0], [0, 2], [3, 3]])
+    svc = DatalogService(TC, db={"arc": arc}, default_cap=2048)
+    eng = Engine(TC, db={"arc": arc}, default_cap=2048)
+    queries = ["tc(0, 2)", "tc(1, 1)", "tc(X, X)", "tc(2, 2)"]
+    res = svc.ask_batch(queries)
+    for q, rows in zip(queries, res):
+        assert rows_set(rows) == rows_set(eng.ask(q)), q
+    # the three 'bb' queries batched; tc(X, X) went through the ff model
+    assert svc.stats.tuple_batched_queries == 3
+
+
+def test_mixed_adornment_batches_do_not_coalesce():
+    """sg(c, X) ('bf') and sg(c, c') ('bb') demand different seed schemas —
+    they must evaluate as separate fixpoints, never one.  Shapes that do not
+    admit per-seed attribution at all ('fb' adorns an all-free occurrence)
+    fall back to sequential evaluation inside the same batch."""
+    arc = np.array([[0, 2], [0, 3], [1, 4], [1, 5], [2, 6], [3, 7], [4, 8]])
+    svc = DatalogService(SG, db={"arc": arc}, default_cap=4096)
+    eng = Engine(SG, db={"arc": arc}, default_cap=4096)
+    queries = [("sg", (2, None)), ("sg", (2, 3)), ("sg", (3, None)),
+               ("sg", (6, 7)), ("sg", (None, 7)), ("sg", (None, 6))]
+    res = svc.ask_batch(queries)
+    for q, rows in zip(queries, res):
+        assert rows_set(rows) == rows_set(eng.ask(*q)), q
+    # 'bf' and 'bb' batch separately; the 'fb' pair runs sequentially
+    assert svc.stats.tuple_fixpoints == 2
+    assert svc.stats.tuple_batched_queries == 4
+    names = sorted(p_a.split("+")[0] for p_a in svc.explain()["templates"])
+    assert names == ["sg/bb", "sg/bf", "sg/fb"]
+
+
+def test_tuple_batch_agg_shapes():
+    """min-agg tuple batches: point-distance queries adorn 'bbf' (the value
+    position is always free; a value *constant* rides the same shape as a
+    residual filter) and split per qid with values.  The dense router must
+    not claim them — their tails are not all-free."""
+    darc = np.array([[0, 1, 4], [0, 2, 1], [2, 1, 1], [1, 3, 2], [3, 0, 7],
+                     [2, 3, 9], [5, 6, 2]])
+    svc = DatalogService(SPATH, db={"darc": darc}, default_cap=2048)
+    eng = Engine(SPATH, db={"darc": darc}, default_cap=2048)
+    queries = [("dpath", (0, 3, None)), ("dpath", (0, 1, None)),
+               ("dpath", (2, 3, None)), ("dpath", (0, 3, 4))]
+    res = svc.ask_batch(queries)
+    for q, r in zip(queries, res):
+        assert agg_set(r) == agg_set(eng.ask(*q)), q
+    assert agg_set(res[0]) == {(0, 3, 4)} and agg_set(res[3]) == {(0, 3, 4)}
+    assert svc.stats.tuple_fixpoints == 1
+    assert svc.stats.tuple_batched_queries == 4
+
+
+def test_tuple_batch_warm_shapes_skip_retracing():
+    """CI satellite: a warm tuple batch whose padded shapes (seed bucket +
+    magic-set buckets) repeat reuses the compiled batched fixpoint —
+    fixpoint_trace_count() must not move.  (Different sources can cross a
+    quantize_rows bucket when the union demand set grows; same sources on a
+    cleared result cache hold every shape fixed.)"""
+    arc = np.array([[0, 2], [0, 3], [1, 4], [1, 5], [2, 6], [3, 7], [4, 8]])
+    svc = DatalogService(SG, db={"arc": arc}, default_cap=4096)
+    batch = [("sg", (s, None)) for s in [2, 3, 6]]
+    svc.ask_batch(batch)  # cold: compiles the qid fixpoint
+    svc.cache.clear()
+    t0 = engine_mod.fixpoint_trace_count()
+    svc.ask_batch(batch)  # warm: same shapes, zero traces
+    assert engine_mod.fixpoint_trace_count() == t0
+    assert svc.stats.tuple_fixpoints == 2
+
+
+def test_engine_ask_batch_matches_ask():
+    """Engine-level ask_batch: same-shape goals share one fixpoint; EDB
+    selections, mixed shapes and all-free goals fall back transparently."""
+    eng = Engine(TC, db={"arc": EDGES}, default_cap=2048)
+    queries = ["tc(0, 3)", "tc(4, 2)", ("arc", (2, None)), "tc(1, X)",
+               ("tc", (None, 5)), "tc(9, 9)"]
+    res = eng.ask_batch(queries)
+    for q, rows in zip(queries, res):
+        want = eng.ask(q) if not (isinstance(q, tuple) and q[0] == "arc") \
+            else eng.ask(*q)
+        assert rows_set(rows) == rows_set(want), q
+
+
+def test_engine_multi_goal_program_batches():
+    """Parser -> IR -> planner wiring: a program with several same-shape
+    '?-' goals plans ONE qid-batched fixpoint; batch_results() splits."""
+    eng = Engine(TC + "?- tc(1, X).\n?- tc(4, X).\n?- tc(5, X).",
+                 db={"arc": EDGES}, default_cap=2048).run()
+    ref = Engine(TC, db={"arc": EDGES}, default_cap=2048)
+    for s, rows in zip([1, 4, 5], eng.batch_results()):
+        assert rows_set(rows) == rows_set(ref.ask("tc", (s, None))), s
+    with pytest.raises(ValueError):  # mixed shapes refuse a single plan
+        Engine(TC + "?- tc(1, X).\n?- tc(X, 5).", db={"arc": EDGES})
+
+
+# ---------------------------------------------------------------------------
+# incremental: tuple snapshot resume + eviction-aware policy
+# ---------------------------------------------------------------------------
+
+
+def test_tuple_batch_append_resumes_snapshot():
+    """A batched tuple template snapshots its fixpoint state; a monotone
+    append re-enters from that state (same seeds) and refreshes the per-qid
+    cache entries instead of invalidating them."""
+    arc = np.array([[0, 2], [0, 3], [1, 4], [1, 5], [2, 6], [3, 7], [4, 8]])
+    svc = DatalogService(SG, db={"arc": arc}, default_cap=4096)
+    sources = [2, 3, 6]
+    svc.ask_batch([("sg", (s, None)) for s in sources])
+    svc.append("arc", [[6, 9], [7, 10]])
+    assert svc.stats.resumed_tuple_rows == len(sources)
+    appended = np.concatenate([arc, [[6, 9], [7, 10]]])
+    eng = Engine(SG, db={"arc": appended}, default_cap=4096)
+    h0 = svc.cache.hits
+    for s in sources:
+        assert rows_set(svc.ask("sg", (s, None))) == \
+            rows_set(eng.ask("sg", (s, None))), s
+    assert svc.cache.hits == h0 + len(sources)  # served from refreshed cache
+
+
+def test_eviction_aware_append_resume_drops_cold_tail():
+    """Satellite regression: with resume_min_hits=1, only entries that
+    served a query since their last compute resume on append; the cold LRU
+    tail is EVICTED (dropped_cold counts it), not recomputed."""
+    svc = DatalogService(TC, db={"arc": EDGES}, default_cap=2048,
+                         resume_min_hits=1)
+    sources = [0, 4, 5]
+    svc.ask_batch([("tc", (s, None)) for s in sources])
+    svc.ask("tc", (0, None))  # source 0 is hot (one serve since compute)
+    fx0 = svc.stats.dense_fixpoints
+    svc.append("arc", [[6, 7], [3, 5]])
+    assert svc.stats.resumed_rows == 1  # only the hot entry resumed
+    assert svc.stats.dropped_cold == 2  # cold tail evicted, not maintained
+    key_cold = ("tc", 4, "~1")
+    assert key_cold not in svc.cache
+    # cold source recomputes (fresh fixpoint) and is still correct
+    appended = np.concatenate([EDGES, [[6, 7], [3, 5]]])
+    eng = Engine(TC, db={"arc": appended}, default_cap=2048)
+    assert rows_set(svc.ask("tc", (4, None))) == \
+        rows_set(eng.ask("tc", (4, None)))
+    assert svc.stats.dense_fixpoints > fx0 + 1  # resume + the recompute
+    # the hot entry serves straight from the refreshed cache
+    h0 = svc.cache.hits
+    assert rows_set(svc.ask("tc", (0, None))) == \
+        rows_set(eng.ask("tc", (0, None)))
+    assert svc.cache.hits == h0 + 1
+
+
+def test_warm_start_guard_rejects_unsound_programs():
+    """Engine.run(warm=) must refuse programs where warm rows corrupt the
+    model: additive aggregates double-bill, negation keeps refuted facts.
+    min/max and plain sets re-converge exactly (the service's resume gate)."""
+    deg = "deg(X, count<Y>) <- e(X, Y).\n"
+    e = np.array([[0, 1], [0, 2], [1, 2]])
+    eng = Engine(deg, db={"e": e}, default_cap=256).run()
+    warm = dict(eng.materialized)
+    eng2 = Engine(deg, db={"e": np.concatenate([e, [[1, 3]]])},
+                  default_cap=256)
+    with pytest.raises(PlanError):
+        eng2.run(warm=warm)
+    neg = "alone(X) <- v(X), ~e(X, X).\n"
+    engn = Engine(neg, db={"e": e, "v": np.array([[0], [1]])},
+                  default_cap=256).run()
+    with pytest.raises(PlanError):
+        Engine(neg, db={"e": e, "v": np.array([[0], [1]])},
+               default_cap=256).run(warm=dict(engn.materialized))
+
+
+def test_append_to_unrelated_relation_revalidates_snapshot_entries():
+    """Appending to an EDB a batched template never reads must not re-run
+    its fixpoint NOR drop its cached answers — they revalidate in place."""
+    prog = SG + "\nother(X,Y) <- extra(X,Y).\n"
+    arc = np.array([[0, 2], [0, 3], [2, 6], [3, 7]])
+    extra = np.array([[1, 1]])
+    svc = DatalogService(prog, db={"arc": arc, "extra": extra},
+                         default_cap=4096)
+    svc.ask_batch([("sg", (2, None)), ("sg", (3, None))])
+    runs0 = svc.stats.tuple_runs
+    svc.append("extra", [[5, 5]])
+    assert svc.stats.resumed_tuple_rows == 0  # nothing re-ran
+    h0 = svc.cache.hits
+    assert rows_set(svc.ask("sg", (2, None))) == {(2, 3)}
+    assert svc.cache.hits == h0 + 1 and svc.stats.tuple_runs == runs0
+
+
+def test_tuple_snapshot_resumes_hot_subset_only():
+    """Under resume_min_hits, only the HOT positions of a batched snapshot
+    resume: cold seeds leave the re-entered fixpoint and the next snapshot;
+    their entries evict and a later ask recomputes them correctly."""
+    arc = np.array([[0, 2], [0, 3], [1, 4], [1, 5], [2, 6], [3, 7], [4, 8]])
+    svc = DatalogService(SG, db={"arc": arc}, default_cap=4096,
+                         resume_min_hits=1)
+    sources = [2, 3, 6]
+    svc.ask_batch([("sg", (s, None)) for s in sources])
+    svc.ask("sg", (3, None))  # only source 3 is hot
+    svc.append("arc", [[6, 9], [7, 10]])
+    assert svc.stats.resumed_tuple_rows == 1
+    assert svc.stats.dropped_cold == 2
+    appended = np.concatenate([arc, [[6, 9], [7, 10]]])
+    eng = Engine(SG, db={"arc": appended}, default_cap=4096)
+    h0 = svc.cache.hits
+    assert rows_set(svc.ask("sg", (3, None))) == \
+        rows_set(eng.ask("sg", (3, None)))  # hot: refreshed cache entry
+    assert svc.cache.hits == h0 + 1
+    for s in (2, 6):  # cold: evicted, recomputed fresh, still correct
+        assert rows_set(svc.ask("sg", (s, None))) == \
+            rows_set(eng.ask("sg", (s, None))), s
+    # a second append resumes only the surviving snapshot position
+    svc.ask("sg", (3, None))
+    svc.append("arc", [[8, 11]])
+    assert svc.stats.resumed_tuple_rows == 2
+
+
+def test_tuple_snapshot_respects_hit_policy():
+    """Under resume_min_hits, a batched tuple snapshot none of whose entries
+    were hit is dropped on append (no maintenance fixpoint for it)."""
+    arc = np.array([[0, 2], [0, 3], [2, 6], [3, 7]])
+    svc = DatalogService(SG, db={"arc": arc}, default_cap=4096,
+                         resume_min_hits=1)
+    svc.ask_batch([("sg", (2, None)), ("sg", (3, None))])
+    svc.append("arc", [[0, 4], [4, 8]])
+    assert svc.stats.resumed_tuple_rows == 0
+    assert svc.stats.dropped_cold >= 2
+    # correctness after the drop: recomputed answers match a fresh engine
+    appended = np.concatenate([arc, [[0, 4], [4, 8]]])
+    eng = Engine(SG, db={"arc": appended}, default_cap=4096)
+    assert rows_set(svc.ask("sg", (2, None))) == \
+        rows_set(eng.ask("sg", (2, None)))
+
+
+# ---------------------------------------------------------------------------
 # CLI
 # ---------------------------------------------------------------------------
 
