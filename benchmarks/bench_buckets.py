@@ -1,0 +1,126 @@
+"""Shape-bucket tuning: recompile-count vs padding-waste for quantize_rows.
+
+Data-dependent row counts (magic seed relations above all) quantize to
+power-of-two buckets (``seminaive.quantize_rows``) so warm queries hit
+already-compiled fixpoints.  The bucket lattice's *floor* is a knob: a high
+floor folds every small batch into ONE compiled shape (fewest re-traces,
+most padding), the default floor of 8 tracks sizes tightly (least padding,
+a re-trace per new bucket).  Per-relation floors are pinned via
+``PlanOptions.bucket_floors`` / ``DatalogService(bucket_floors=...)``, keyed
+by relation name — for a serving template's seed relation that name is
+``__qseed_<pred>__<adornment>``.
+
+This bench drives the ``bench_serve`` tuple query mix (single-source ``sg``
+batches of mixed sizes against a tree graph — the size mix is what makes
+bucketing interesting) through one service per candidate floor and reports:
+
+  * ``retraces``   — ``fixpoint_trace_count`` delta over the stream (each
+    is a multi-second XLA compile on the serving path);
+  * ``pad_waste``  — mean fraction of padded seed rows per batch;
+  * ``seconds``    — stream wall time (the number that integrates both).
+
+Usage:  PYTHONPATH=src python benchmarks/bench_buckets.py [--smoke] [--out F]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import engine as engine_mod
+from repro.core.seminaive import quantize_rows
+from repro.data.graphs import tree_graph
+from repro.service import DatalogService
+
+SG = """
+sg(X,Y) <- arc(P,X), arc(P,Y), X != Y.
+sg(X,Y) <- arc(A,X), sg(A,B), arc(B,Y).
+"""
+
+SEED_REL = "__qseed_sg__bf"  # the template's parameterized seed relation
+
+
+def batch_mix(rng, n_batches: int, max_b: int) -> list[int]:
+    """A serving-realistic size mix: mostly small bursts, a few big ones."""
+    sizes = []
+    for _ in range(n_batches):
+        if rng.random() < 0.25:
+            sizes.append(int(rng.integers(max_b // 2, max_b + 1)))
+        else:
+            sizes.append(int(rng.integers(1, max(max_b // 4, 2))))
+    return sizes
+
+
+def run_stream(edges, sizes, sources, floor: int) -> dict:
+    svc = DatalogService(SG, db={"arc": edges}, default_cap=4096,
+                         result_cache=0,  # measure evaluation, not caching
+                         bucket_floors={SEED_REL: floor})
+    t0 = engine_mod.fixpoint_trace_count()
+    si = iter(sources)
+    waste = []
+    start = time.perf_counter()
+    for b in sizes:
+        batch = [("sg", (int(next(si)), None)) for _ in range(b)]
+        svc.ask_batch(batch)
+        cap = quantize_rows(b, minimum=max(floor, 8))
+        waste.append((cap - b) / cap)
+    seconds = time.perf_counter() - start
+    return {
+        "floor": floor,
+        "retraces": engine_mod.fixpoint_trace_count() - t0,
+        "pad_waste": float(np.mean(waste)),
+        "seconds": seconds,
+    }
+
+
+def bench(smoke: bool) -> dict:
+    height, n_batches, max_b = (4, 6, 8) if smoke else (5, 24, 32)
+    edges = tree_graph(height, seed=7, min_deg=3, max_deg=4)
+    nverts = int(edges.max()) + 1
+    rng = np.random.default_rng(31)
+    sizes = batch_mix(rng, n_batches, max_b)
+    # enough mid-tree sources for every batch, reused across floors so each
+    # service sees the IDENTICAL stream
+    total = sum(sizes)
+    sources = (rng.integers(nverts // 3, 2 * nverts // 3, total)).tolist()
+    floors = [8, 16, 32] if smoke else [8, 16, 32, 64]
+    rec: dict = {"graph": f"tree-h{height}", "edges": int(len(edges)),
+                 "batches": sizes, "smoke": smoke, "floors": []}
+    print(f"{rec['graph']}: {len(edges)} edges, {n_batches} batches "
+          f"(sizes {min(sizes)}..{max(sizes)})", flush=True)
+    for floor in floors:
+        r = run_stream(edges, sizes, sources, floor)
+        rec["floors"].append(r)
+        print(f"  floor {floor:3d}: {r['retraces']:3d} retraces, "
+              f"pad waste {r['pad_waste']:.0%}, {r['seconds']:.2f}s",
+              flush=True)
+    best = min(rec["floors"], key=lambda r: r["seconds"])
+    rec["recommended_floor"] = best["floor"]
+    print(f"  recommended bucket floor for {SEED_REL}: {best['floor']} "
+          f"(stream {best['seconds']:.2f}s)", flush=True)
+    # sanity: a floor covering the whole size mix must collapse the seed
+    # shapes — strictly fewer (or equal) re-traces than the tightest floor
+    assert rec["floors"][-1]["retraces"] <= rec["floors"][0]["retraces"]
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    rec = bench(args.smoke)
+    if args.smoke and args.out is None:
+        print(json.dumps(rec, indent=2))
+        return
+    out = Path(args.out) if args.out else \
+        Path(__file__).parent / "BENCH_buckets.json"
+    out.write_text(json.dumps(rec, indent=2))
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -17,12 +17,21 @@ Workload: single-source TC queries against a >= 10k-edge random digraph
     B demands in ONE tuple-path PSN fixpoint and splits answers per seed,
     vs B sequential ``Engine.ask()`` calls.
 
+  * ``sparse``      — ``--sparse``: the CSR-packed frontier engine vs the
+    dense matrix on a sparse Gn-p workload (|E| ≪ n²): same batched serving
+    path, representation forced either way (``DatalogService(sparse=)``).
+
 Acceptance (ISSUE 2): steady-state B=32 serving >= 5x sequential
 ``Engine.ask`` qps; append-resume beats recompute.
 Acceptance (ISSUE 4): steady-state B=16 tuple-batch >= 3x sequential
 ``Engine.ask`` qps; warm tuple batches skip re-tracing (asserted in smoke).
+Acceptance (ISSUE 5): on sparse G4096 (p≈0.002) the batched CSR frontier
+fixpoint serves >= 3x dense steady-state qps at B=32, answers bit-identical,
+``fixpoint_trace_count`` stable across warm CSR batches.
 
 Usage:  PYTHONPATH=src python benchmarks/bench_serve.py [--smoke] [--out F]
+        ... --sparse   run ONLY the sparse-vs-dense section and merge it
+                       into the existing BENCH_serve.json (prints on smoke)
 """
 from __future__ import annotations
 
@@ -220,17 +229,90 @@ def bench(smoke: bool) -> dict:
     return rec
 
 
+def bench_sparse(smoke: bool) -> dict:
+    """CSR-vs-dense steady-state serving on a sparse Gn-p workload.
+
+    Both services run the same batched closure path (``ask_batch`` ->
+    ``_run_dense_batch``); only the representation differs — the dense one
+    multiplies the (n_alloc, n_alloc) matrix every iteration, the CSR one
+    runs the O(|E|) segment step over packed arcs.  Steady state = second
+    batch of fresh sources (compile-warm, result-cache cold).
+    """
+    if smoke:
+        n, p, b = 1024, 0.004, 16
+    else:
+        n, p, b = 4096, 0.002, 32
+    edges = gnp_graph(n, p, seed=23)
+    rng = np.random.default_rng(29)
+    sources = rng.choice(n, size=3 * b, replace=False).tolist()
+    density = len(edges) / float(n * n)
+    rec: dict = {"graph": f"G{n}-p{p}", "edges": int(len(edges)),
+                 "density": density, "batch": b, "smoke": smoke}
+    print(f"sparse: {rec['graph']}, {rec['edges']} edges "
+          f"(density {density:.2e}), B={b}", flush=True)
+    sides = {}
+    for name, flag in (("dense", False), ("csr", True)):
+        svc = DatalogService(TC, db={"arc": edges}, sparse=flag)
+        cold_q = [("tc", (s, None)) for s in sources[:b]]
+        res_cold, t_cold = _wall(lambda: svc.ask_batch(cold_q))
+        steady_q = [("tc", (s, None)) for s in sources[b:2 * b]]
+        res_steady, t_steady = _wall(lambda: svc.ask_batch(steady_q))
+        # warm-shape stability: a third batch of fresh sources hits the same
+        # padded (B, n_alloc) fixpoint shape — zero re-traces
+        t0 = engine_mod.fixpoint_trace_count()
+        svc.ask_batch([("tc", (s, None)) for s in sources[2 * b:3 * b]])
+        assert engine_mod.fixpoint_trace_count() == t0, \
+            f"warm {name} batch re-traced a compiled fixpoint"
+        assert (svc.stats.csr_fixpoints > 0) == flag  # routed as forced
+        sides[name] = {"svc": svc, "cold": res_cold, "steady": res_steady}
+        rec[name] = {"cold_seconds": t_cold, "cold_qps": b / t_cold,
+                     "steady_seconds": t_steady, "steady_qps": b / t_steady}
+        print(f"  {name:5s}: cold {b / t_cold:8.1f} qps, "
+              f"steady {b / t_steady:8.1f} qps", flush=True)
+    for kind in ("cold", "steady"):  # dense-vs-CSR answers bit-identical
+        for a, c in zip(sides["dense"][kind], sides["csr"][kind]):
+            assert np.array_equal(a, c), "dense/CSR answers diverged"
+    rec["speedup_csr_vs_dense_steady"] = \
+        rec["csr"]["steady_qps"] / rec["dense"]["steady_qps"]
+    print(f"  CSR vs dense steady: "
+          f"{rec['speedup_csr_vs_dense_steady']:.1f}x", flush=True)
+    if smoke:
+        assert rec["speedup_csr_vs_dense_steady"] >= 1.0, \
+            "CSR slower than dense on the sparse smoke workload"
+    else:
+        assert rec["speedup_csr_vs_dense_steady"] >= 3.0, \
+            "acceptance: CSR >= 3x dense steady qps on sparse G4096"
+    return rec
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny instance for CI; does not write the JSON")
+    ap.add_argument("--sparse", action="store_true",
+                    help="run only the CSR-vs-dense sparse section and merge"
+                         " it into the existing JSON")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
+    out = Path(args.out) if args.out else Path(__file__).parent / "BENCH_serve.json"
+    if args.sparse:
+        rec = bench_sparse(args.smoke)
+        if args.smoke and args.out is None:
+            print(json.dumps(rec, indent=2))
+            return
+        merged = json.loads(out.read_text()) if out.exists() else {}
+        merged["sparse"] = rec
+        out.write_text(json.dumps(merged, indent=2))
+        print(f"wrote {out} (sparse section)")
+        return
     rec = bench(args.smoke)
     if args.smoke and args.out is None:
         print(json.dumps(rec, indent=2))
         return
-    out = Path(args.out) if args.out else Path(__file__).parent / "BENCH_serve.json"
+    if out.exists():  # keep an already-recorded sparse section
+        prev = json.loads(out.read_text())
+        if "sparse" in prev:
+            rec["sparse"] = prev["sparse"]
     out.write_text(json.dumps(rec, indent=2))
     print(f"wrote {out}")
 

@@ -14,7 +14,7 @@ MODULES = [
     "repro.core", "repro.core.engine", "repro.core.magic", "repro.core.parser",
     "repro.core.planner", "repro.core.ir", "repro.core.stratify",
     "repro.core.prem", "repro.core.relation", "repro.core.seminaive",
-    "repro.core.semiring", "repro.core.distributed",
+    "repro.core.semiring", "repro.core.distributed", "repro.core.sparse",
     "repro.service", "repro.service.session", "repro.service.batch",
     "repro.service.incremental", "repro.service.cache", "repro.service.serve",
     "repro.kernels", "repro.data.graphs",
@@ -42,3 +42,6 @@ DIFF_SEED=0 DIFF_CASES="${DIFF_CASES:-16}" \
 
 echo "== serving smoke bench (incl. tuple-batch + trace-count assert) =="
 python benchmarks/bench_serve.py --smoke
+
+echo "== sparse serving smoke bench (CSR >= dense qps + warm-shape trace assert) =="
+python benchmarks/bench_serve.py --smoke --sparse

@@ -122,6 +122,58 @@ def tc_frontier_decomposable(mesh, adj: jax.Array, frontier: jax.Array,
     return closed[:k], iters
 
 
+def csr_frontier_decomposable(mesh, csr, frontier: jax.Array,
+                              axis: str = "data", spmv=None,
+                              max_iters: int | None = None):
+    """Fig.-4 sharding of the *sparse* frontier fixpoint (``core.sparse``).
+
+    The (B, n) batch frontier rows shard across the mesh exactly like
+    ``tc_frontier_decomposable`` (the GPS pivot is the source argument); the
+    CSR-packed arcs broadcast once, like the base relation, so each shard
+    runs its own O(|E|)-per-iteration segment fixpoint and the recursion
+    stays shuffle-free — the only collective is the scalar convergence
+    ``psum``.  Rows zero-pad to a multiple of the axis size and slice back.
+    """
+    from .sparse import csr_frontier_step
+
+    sr = csr.semiring
+    step = spmv or csr_frontier_step(csr.kind)
+    k = frontier.shape[0]
+    nshards = mesh.shape[axis]
+    pad = (-k) % nshards
+    if pad:
+        fill = jnp.full((pad, frontier.shape[1]), sr.zero, frontier.dtype)
+        frontier = jnp.concatenate([frontier, fill])
+    iters_cap = max_iters or (4 * frontier.shape[1] + 8)
+
+    def body_fn(f_loc, csr_full):
+        def cond(c):
+            _, alive, it = c
+            return alive & (it < iters_cap)
+
+        def body(c):
+            d, _, it = c
+            upd = step(d, csr_full)
+            dn = sr.add(d, upd)
+            changed = jnp.sum(dn != d) if sr.dtype == jnp.bool_ else jnp.sum(
+                ~((dn == d) | (jnp.isinf(dn) & jnp.isinf(d))))
+            alive = jax.lax.psum(changed, axis) > 0  # the only collective
+            return dn, alive, it + 1
+
+        d, _, it = jax.lax.while_loop(
+            cond, body, (f_loc, jnp.array(True), jnp.int32(0)))
+        return d, it
+
+    fn = _shard_map(
+        body_fn, mesh=mesh,
+        in_specs=(P(axis, None), P()),  # rows sharded; packed arcs broadcast
+        out_specs=(P(axis, None), P()),
+        check_vma=False,
+    )
+    closed, iters = fn(frontier, csr)
+    return closed[:k], iters
+
+
 def resume_frontier_decomposable(mesh, adj: jax.Array, prev: jax.Array,
                                  seed: jax.Array, axis: str = "data",
                                  sr: Semiring = BOOL, matmul=None,

@@ -53,6 +53,8 @@ from .planner import (CompiledRule, EdbJoinStep, GroupPlan, PlanError,
                       PlanOptions, ProgramPlan, SourceDelta, SourceEdb,
                       batch_adornment, plan_program)
 from .relation import EMPTY, AggTable, FactTable, Schema, _MERGE_INIT
+from . import seminaive as _sn
+from . import sparse as _sparse
 from .seminaive import (Bindings, EdbIndex, build_edb_index, join_edb,
                         join_idb_prefix, pack_warm_rows, quantize_rows,
                         reachable_from_dense, single_source_distances_dense)
@@ -157,12 +159,13 @@ def split_qid_answers(pred: str, rows, vals, info, qlits, qids=None) -> list:
 #: structural plan key -> jitted group runner (shared across Engine instances)
 _RUNNER_CACHE: dict[tuple, Callable] = {}
 _RUNNER_CACHE_LIMIT = 256
-_TRACE_COUNT = 0
 
 
 def fixpoint_trace_count() -> int:
-    """Number of times a group fixpoint has been (re-)traced process-wide."""
-    return _TRACE_COUNT
+    """Number of times a fixpoint has been (re-)traced process-wide — group
+    runners, cached dense fixpoints and CSR fixpoints alike (the counter
+    lives in ``seminaive`` so every engine representation shares it)."""
+    return _sn.trace_count()
 
 
 def clear_runner_cache() -> None:
@@ -226,8 +229,7 @@ class GroupExecutor:
     def _run_group(self, facts, edb):
         """facts: {pred: (packed_keys, values|None)}; edb: {'idx': {...},
         'src': {...}} — all jit arguments.  Returns (state, iters, gen)."""
-        global _TRACE_COUNT
-        _TRACE_COUNT += 1  # executes at trace time only
+        _sn.bump_trace_count()  # executes at trace time only
         gp = self.gp
         state = {p: {"all": self._empty_table(info), "delta": self._empty_table(info)}
                  for p, info in gp.preds.items()}
@@ -453,6 +455,9 @@ class Engine:
         query: QuerySpec | None = None,
         batch: list | tuple | None = None,
         magic: bool = True,
+        sparse: bool | None = None,
+        sparse_threshold: float | None = None,
+        bucket_floors: dict[str, int] | None = None,
     ):
         if isinstance(program, str):
             program = parse_program(program, constants=constants)
@@ -479,7 +484,10 @@ class Engine:
                  if batch is not None else None)
         self.magic = magic
         self.plan: ProgramPlan = plan_program(
-            program, PlanOptions(query=qlit, batch=blits, magic=magic))
+            program, PlanOptions(
+                query=qlit, batch=blits, magic=magic, sparse=sparse,
+                sparse_threshold=sparse_threshold,
+                bucket_floors=tuple(sorted((bucket_floors or {}).items()))))
         # groups/facts reference the post-pass (possibly magic-rewritten) rules
         self.program = self.plan.rewritten
         self.bits = bits
@@ -573,14 +581,22 @@ class Engine:
             self._verify_ask(q, out, info.is_agg)
         return out
 
-    def ask_dense(self, pred: str, args: tuple, matmul=None):
+    def ask_dense(self, pred: str, args: tuple, matmul=None,
+                  sparse: bool | None = None, spmv=None):
         """Single-source fast path: lower a magic-restricted *decomposable*
-        program onto the dense ``form="vector"`` semiring fixpoint seeded with
-        the query frontier row (the dense analog of ``tc_decomposable``).
+        program onto a frontier semiring fixpoint seeded with the query
+        frontier row (the dense analog of ``tc_decomposable``).
 
         Requires the canonical TC / shortest-path shape with the pivot (first)
         argument bound and everything else free; raises ``PlanError``
         otherwise.
+
+        Two carriers behind the one lowering: the dense ``form="vector"``
+        fixpoint (O(n²) per iteration) or the CSR-packed segment fixpoint
+        (``core.sparse``, O(|E|) per iteration).  ``sparse`` (defaulting to
+        ``PlanOptions.sparse``) forces a representation; ``None`` lets the
+        density heuristic pick.  ``matmul`` overrides the dense ⊗, ``spmv``
+        the sparse segment step.
         """
         low = detect_frontier_lowering(self.source_program, pred)
         q = as_query_literal((pred, args))
@@ -594,24 +610,38 @@ class Engine:
             rows = np.zeros((0, 2), np.int64)
             return rows if low.kind == "bool" else (rows, np.zeros((0,), np.int64))
         n = max(int(edges[:, :2].max()) + 1, src + 1)
-        if low.kind == "bool":
+        opts = self.plan.options
+        use_csr = opts.sparse if sparse is None else sparse
+        if use_csr is None:
+            use_csr = _sparse.prefer_csr(
+                len(edges), n,
+                opts.sparse_threshold if opts.sparse_threshold is not None
+                else _sparse.DEFAULT_SPARSE_THRESHOLD)
+        if use_csr:
+            csr = _sparse.build_csr(edges, n, low.kind)
+            res = _sparse.fixpoint_csr_cached(
+                csr, _sparse.rows_from_sources(csr, [src]), spmv=spmv)
+            row = np.asarray(res.table[0])
+        elif low.kind == "bool":
             adj = np.zeros((n, n), bool)
             adj[edges[:, 0], edges[:, 1]] = True
             res = reachable_from_dense(jnp.asarray(adj), src, matmul=matmul)
-            reach = np.asarray(res.table)
-            dst = np.nonzero(reach)[0]
-            out = np.stack([np.full(len(dst), src, np.int64),
-                            dst.astype(np.int64)], axis=1)
+            row = np.asarray(res.table)
         else:
             w = np.full((n, n), np.inf, np.float32)
             np.minimum.at(w, (edges[:, 0], edges[:, 1]), edges[:, 2].astype(np.float32))
             res = single_source_distances_dense(jnp.asarray(w), src, matmul=matmul)
-            d = np.asarray(res.table)
-            dst = np.nonzero(np.isfinite(d))[0]
+            row = np.asarray(res.table)
+        if low.kind == "bool":
+            dst = np.nonzero(row[:n])[0]
+            out = np.stack([np.full(len(dst), src, np.int64),
+                            dst.astype(np.int64)], axis=1)
+        else:
+            dst = np.nonzero(np.isfinite(row[:n]))[0]
             rows = np.stack([np.full(len(dst), src, np.int64),
                              dst.astype(np.int64)], axis=1)
-            out = (rows, d[dst].astype(np.int64))
-        self.stats[f"{pred}__dense"] = GroupStats(
+            out = (rows, row[dst].astype(np.int64))
+        self.stats[f"{pred}__{'csr' if use_csr else 'dense'}"] = GroupStats(
             iterations=int(res.iterations), generated=int(res.generated))
         return out
 
@@ -674,7 +704,8 @@ class Engine:
                          caps=self.caps if caps is None else caps,
                          default_cap=default_cap or self.default_cap,
                          join_cap=join_cap or self.join_cap,
-                         max_iters=self.max_iters, batch=batch)
+                         max_iters=self.max_iters, batch=batch,
+                         **self._opt_kwargs())
             sub.run()
         except (PlanError, MagicError, ValueError, CapacityError):
             # ValueError covers packed-width overflow (qid column pushes the
@@ -701,13 +732,19 @@ class Engine:
         self._batch_out = split_qid_answers(
             qp, rows, vals, info, self.plan.options.batch)
 
+    def _opt_kwargs(self) -> dict:
+        """Representation/bucketing options to thread into sub-engines."""
+        opts = self.plan.options
+        return dict(sparse=opts.sparse, sparse_threshold=opts.sparse_threshold,
+                    bucket_floors=dict(opts.bucket_floors))
+
     def _query_engine(self, q: Literal, caps=None, default_cap=None,
                       join_cap=None) -> "Engine":
         kwargs = dict(db=self.db, bits=self.bits,
                       caps=self.caps if caps is None else caps,
                       default_cap=default_cap or self.default_cap,
                       join_cap=join_cap or self.join_cap,
-                      max_iters=self.max_iters)
+                      max_iters=self.max_iters, **self._opt_kwargs())
         try:
             return Engine(self.source_program, query=q, magic=self.magic, **kwargs)
         except PlanError:
@@ -808,10 +845,19 @@ class Engine:
             return rows
         raise PlanError(f"unknown relation {rel!r} (neither EDB nor evaluated IDB)")
 
+    def _bucket_floor(self, rel: str) -> int:
+        """Per-relation quantize_rows floor (``PlanOptions.bucket_floors``)."""
+        for name, floor in self.plan.options.bucket_floors:
+            if name == rel:
+                return floor
+        return 8
+
     def _index(self, rel: str, cols: tuple[int, ...]) -> EdbIndex:
         key = (rel, cols)
         if key not in self._index_cache:
-            self._index_cache[key] = build_edb_index(self._rows_of(rel), cols, self.bits)
+            self._index_cache[key] = build_edb_index(
+                self._rows_of(rel), cols, self.bits,
+                minimum=self._bucket_floor(rel))
         return self._index_cache[key]
 
     def _schema(self, info) -> Schema:
@@ -853,7 +899,8 @@ class Engine:
         for col, const in source.select:  # pushed-down selections
             np_rows = np_rows[np.asarray(np_rows[:, col]) == const]
         n = len(np_rows)
-        cap = quantize_rows(max(n, 1))  # bucket data-dependent scan shapes
+        # bucket data-dependent scan shapes (per-relation floors pin shapes)
+        cap = quantize_rows(max(n, 1), minimum=max(self._bucket_floor(source.rel), 8))
         if cap > n:
             pad = np.zeros((cap - n, self._rows_of(source.rel).shape[1]), np.int64)
             np_rows = np.concatenate([np.asarray(np_rows, np.int64), pad])

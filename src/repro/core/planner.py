@@ -140,12 +140,27 @@ class PlanOptions:
                   result).
     ``push_constants`` — compile constants in EDB body literals into source
                   selections / constant join probes instead of post-filters.
+    ``sparse``  — dense-lowered frontier fixpoints (``Engine.ask_dense``,
+                  the serving layer's batched closures) pick the CSR-packed
+                  O(|E|)-per-iteration engine (``core.sparse``): ``True`` /
+                  ``False`` force a representation, ``None`` (default) lets
+                  the density heuristic decide per relation.
+    ``sparse_threshold`` — the heuristic's density cut: CSR when
+                  |E|/n² < threshold (``None`` = library default).
+    ``bucket_floors`` — per-relation ``quantize_rows`` floors,
+                  ``((rel, floor), ...)``: relations whose cardinality
+                  hovers around a bucket boundary pin a floor so warm
+                  queries never straddle two compiled shapes (see
+                  ``benchmarks/bench_buckets.py`` for how to pick them).
     """
 
     query: Literal | None = None
     batch: tuple[Literal, ...] | None = None
     magic: bool = True
     push_constants: bool = True
+    sparse: bool | None = None
+    sparse_threshold: float | None = None
+    bucket_floors: tuple[tuple[str, int], ...] = ()
 
 
 @dataclasses.dataclass

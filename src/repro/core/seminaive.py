@@ -31,6 +31,27 @@ from .relation import EMPTY, AggTable, FactTable, Schema, expand_join
 from .semiring import BOOL, MIN_PLUS, Semiring
 
 # ---------------------------------------------------------------------------
+# Trace accounting (shared by every shape-keyed jitted fixpoint)
+# ---------------------------------------------------------------------------
+
+#: process-wide count of fixpoint (re-)traces — group runners, cached dense
+#: fixpoints and CSR fixpoints all bump it, so serving tests can assert warm
+#: batches of ANY representation skip compilation.  Exposed through
+#: ``engine.fixpoint_trace_count()``.
+_TRACE_COUNT = 0
+
+
+def bump_trace_count() -> None:
+    """Call at trace time (inside a jitted body): executes once per compile."""
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1
+
+
+def trace_count() -> int:
+    return _TRACE_COUNT
+
+
+# ---------------------------------------------------------------------------
 # Dense semiring fixpoints
 # ---------------------------------------------------------------------------
 
@@ -198,6 +219,7 @@ def single_source_distances_dense(w: jax.Array, src: int, matmul=None) -> DenseR
 
 @functools.partial(jax.jit, static_argnames=("sr", "form", "matmul", "max_iters"))
 def _fixpoint_dense_jit(sr, arc, init, form, matmul, max_iters):
+    bump_trace_count()  # trace-time only: warm batches must not move it
     return fixpoint_dense(sr, arc, init, form=form, matmul=matmul,
                           max_iters=max_iters)
 
@@ -307,17 +329,24 @@ def pack_warm_rows(rows: np.ndarray, vals: np.ndarray | None, schema: Schema,
     return jnp.asarray(keys), jnp.asarray(v)
 
 
-def build_edb_index(rows: np.ndarray, key_cols: tuple[int, ...], schema_bits: int) -> EdbIndex:
+def build_edb_index(rows: np.ndarray, key_cols: tuple[int, ...], schema_bits: int,
+                    minimum: int = 8) -> EdbIndex:
+    """``minimum`` is the relation's shape-bucket floor (see
+    :func:`quantize_rows`): relations whose cardinality hovers around a
+    bucket boundary can pin a floor (``PlanOptions.bucket_floors``) so warm
+    queries never straddle two compiled shapes."""
     rows = np.asarray(rows, np.int64)
+    minimum = max(minimum, 8)
     if rows.ndim == 1:  # single-column relation (reshape(-1) chokes on 0 rows)
         rows = rows[:, None]
     if len(rows) == 0:
         # sentinel rows keep every downstream gather in-bounds; count=0
         # means no probe can match them (magic-restricted strata are often
         # empty)
-        pad = np.zeros((8, rows.shape[1] if rows.size or rows.ndim > 1 else 1), np.int64)
+        cap = quantize_rows(1, minimum=minimum)
+        pad = np.zeros((cap, rows.shape[1] if rows.size or rows.ndim > 1 else 1), np.int64)
         return EdbIndex(
-            keys=jnp.full((8,), np.iinfo(np.int64).max, jnp.int64),
+            keys=jnp.full((cap,), np.iinfo(np.int64).max, jnp.int64),
             count=jnp.asarray(0, jnp.int32),
             cols=tuple(jnp.asarray(pad[:, i], jnp.int32) for i in range(pad.shape[1])),
         )
@@ -328,7 +357,7 @@ def build_edb_index(rows: np.ndarray, key_cols: tuple[int, ...], schema_bits: in
     order = np.argsort(keys, kind="stable")
     skeys = keys[order]
     scols = rows[order]
-    cap = quantize_rows(len(rows))
+    cap = quantize_rows(len(rows), minimum=minimum)
     if cap > len(rows):
         # EMPTY-pad to the shape bucket: sentinels sort last and sit beyond
         # `count`, so no probe can match them

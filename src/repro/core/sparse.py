@@ -1,0 +1,395 @@
+"""CSR-packed sparse frontier engine — O(|E|)-per-iteration fixpoints.
+
+The dense serving path (``seminaive.fixpoint_dense`` / ``service.batch``)
+multiplies an ``n_align``-rounded O(n²) adjacency every iteration.  On the
+common BigDatalog workload — large sparse graphs with |E| ≪ n² — almost all
+of that FLOP and HBM traffic is ⊕-zero padding, exactly the memory-layout
+bottleneck Fan et al. identify as dominant for recursive queries.  This
+module packs the base relation once into CSR and runs the same semi-naive
+frontier fixpoint over the *edges*:
+
+    out[b, dst] ⊕= frontier[b, src] ⊗ val        for every packed arc
+
+one gather + segment-⊕ scatter per iteration instead of a dense ⊕.⊗ product
+— O(B·|E|) work, O(|E|) memory traffic.
+
+Layout (:class:`CSRMatrix`):
+
+* ``row_ptr``/``col_idx``/``edge_val`` — the canonical CSR spine (arcs
+  sorted by source, ``row_ptr[v]:row_ptr[v+1]`` spans v's out-edges), plus
+  ``src_idx`` — the expanded row ids (CSR-packed COO) that make the edge
+  gather one vectorized operation instead of a per-row loop;
+* ``ell_idx`` — the **degree-bucketed** segment index: for every
+  destination vertex, the packed positions of its in-edges, padded to the
+  bucketed max in-degree (``deg_cap``).  XLA lane scatter serializes per
+  index, so the segment-⊕ instead runs as a gather + (B, n, deg_cap)
+  ⊕-reduce — scatter-free, fully data-parallel (the Gilray et al. layout);
+* ``nnz`` padded to a :func:`~repro.core.seminaive.quantize_rows` bucket
+  with ⊕-zero sentinel arcs (``ell_idx`` pads point at a sentinel slot) —
+  warm graphs whose edge counts and degree profiles stay inside their
+  buckets reuse compiled fixpoints, the serving layer's shape-stability
+  contract;
+* a COO **tail** for monotone appends: new arcs land in a bucketed tail
+  (with its own small ELL index — one extra segment pass per iteration) and
+  fold into the CSR spine only when the tail outgrows ``rebuild_frac`` of
+  the packed arcs — appends stay O(|ΔE|) instead of re-sorting the world.
+
+``fixpoint_csr`` / ``fixpoint_csr_cached`` mirror ``fixpoint_dense`` /
+``fixpoint_dense_cached`` (same :class:`~repro.core.seminaive.DenseResult`,
+same per-row convergence masking, same shape-keyed jit) so the serving stack
+swaps representations behind one batching interface.  The Pallas kernels in
+``repro.kernels.spmv`` implement the same segment-semiring contraction with
+explicit tiling; the jnp gather/scatter here is the oracle and CPU path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .semiring import BOOL, MIN_PLUS, Semiring
+from .seminaive import DenseResult, _ne, bump_trace_count, quantize_rows
+
+#: density |E|/n² below which the serving layer prefers CSR over the dense
+#: matrix (the auto heuristic; PlanOptions.sparse / DatalogService(sparse=)
+#: force either).  Above it the dense ⊕.⊗ product's regular layout wins.
+DEFAULT_SPARSE_THRESHOLD = 1 / 64
+
+
+def prefer_csr(nnz: int, n: int, threshold: float = DEFAULT_SPARSE_THRESHOLD) -> bool:
+    """The density heuristic: CSR pays off when |E|/n² is small."""
+    if n <= 0:
+        return False
+    return (nnz / float(n * n)) < threshold
+
+
+def _semiring_of(kind: str) -> Semiring:
+    return BOOL if kind == "bool" else MIN_PLUS
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("row_ptr", "col_idx", "edge_val", "src_idx", "ell_idx",
+                 "nnz", "tail_src", "tail_dst", "tail_val", "tail_ell",
+                 "tail_nnz"),
+    meta_fields=("n", "n_alloc", "kind", "deg_cap"),
+)
+@dataclasses.dataclass(frozen=True)
+class CSRMatrix:
+    """A base relation packed for sparse frontier fixpoints.
+
+    Registered as a pytree (shape-keyed jit argument, like ``EdbIndex``):
+    the *data* fields trace, the domain/bucket sizes are static metadata, so
+    two graphs sharing buckets share one compiled fixpoint.
+    """
+
+    row_ptr: jax.Array  # (n_alloc + 1,) int32 — CSR spine over sources
+    col_idx: jax.Array  # (cap,) int32 — destinations, source-sorted
+    edge_val: jax.Array  # (cap,) carrier — True / weight; ⊕-zero sentinels
+    src_idx: jax.Array  # (cap,) int32 — expanded row ids (packed COO)
+    ell_idx: jax.Array  # (n_alloc, deg_cap) int32 — per-destination packed
+    #                     positions of its in-edges (degree-bucketed,
+    #                     sentinel-slot padded): the scatter-free segment map
+    nnz: jax.Array  # () int32 — live arcs in the CSR spine
+    tail_src: jax.Array  # (tail_cap,) int32 — appended arcs (COO tail)
+    tail_dst: jax.Array  # (tail_cap,) int32
+    tail_val: jax.Array  # (tail_cap,) carrier
+    tail_ell: jax.Array  # (n_alloc, tail_deg_cap) int32 — tail segment map
+    tail_nnz: jax.Array  # () int32
+    n: int  # live domain size AT BUILD TIME — static metadata (part of the
+    #         jit cache key), so tail appends never touch it: the serving
+    #         layer tracks live growth itself and the segment maps cover all
+    #         of n_alloc regardless
+    n_alloc: int  # padded domain (dense twin's n_align contract)
+    kind: str  # 'bool' | 'minplus'
+    deg_cap: int  # max in-degree, quantize_rows-bucketed (the ELL width)
+
+    @property
+    def semiring(self) -> Semiring:
+        return _semiring_of(self.kind)
+
+    @property
+    def capacity(self) -> int:
+        return int(self.col_idx.shape[0])
+
+    @property
+    def tail_capacity(self) -> int:
+        return int(self.tail_src.shape[0])
+
+    def density(self) -> float:
+        if self.n <= 0:
+            return 0.0
+        return float(int(self.nnz) + int(self.tail_nnz)) / float(self.n * self.n)
+
+    def edges_numpy(self) -> np.ndarray:
+        """The live arcs back as an (m, 2|3) int64 edge list (spine + tail)."""
+        m, t = int(self.nnz), int(self.tail_nnz)
+        src = np.concatenate([np.asarray(self.src_idx[:m]),
+                              np.asarray(self.tail_src[:t])])
+        dst = np.concatenate([np.asarray(self.col_idx[:m]),
+                              np.asarray(self.tail_dst[:t])])
+        if self.kind == "bool":
+            return np.stack([src, dst], axis=1).astype(np.int64)
+        val = np.concatenate([np.asarray(self.edge_val[:m]),
+                              np.asarray(self.tail_val[:t])])
+        return np.stack([src.astype(np.int64), dst.astype(np.int64),
+                         val.astype(np.int64)], axis=1)
+
+
+def _pack_edges(edges: np.ndarray, kind: str):
+    """Normalize an (m, 2|3) edge array into src/dst/val numpy columns."""
+    edges = np.asarray(edges, np.int64)
+    if edges.ndim != 2 or edges.shape[1] not in (2, 3):
+        raise ValueError(f"edge list must be (m, 2|3), got {edges.shape}")
+    src = edges[:, 0].astype(np.int32)
+    dst = edges[:, 1].astype(np.int32)
+    if kind == "bool":
+        val = np.ones(len(edges), bool)
+    else:
+        if edges.shape[1] != 3:
+            raise ValueError("minplus CSR wants (src, dst, weight) rows")
+        val = edges[:, 2].astype(np.float32)
+    return src, dst, val
+
+
+def _ell_index(dst: np.ndarray, m: int, n_alloc: int,
+               sentinel_pos: int) -> np.ndarray:
+    """The scatter-free segment map: for every destination vertex, the
+    packed positions of its in-edges, right-padded with ``sentinel_pos`` (a
+    slot whose value is the ⊕-zero) to the *degree bucket* — the max
+    in-degree rounded up by :func:`quantize_rows`, so degree growth inside
+    the bucket keeps compiled shapes stable.
+    """
+    live = dst[:m]
+    indeg = np.bincount(live, minlength=n_alloc) if m else \
+        np.zeros(n_alloc, np.int64)
+    k = quantize_rows(int(indeg.max()) if m else 1, minimum=1)
+    ell = np.full((n_alloc, k), sentinel_pos, np.int32)
+    if m:
+        order = np.argsort(live, kind="stable")  # positions grouped by dst
+        sorted_dst = live[order]
+        starts = np.cumsum(indeg) - indeg
+        rank = np.arange(m) - starts[sorted_dst]
+        ell[sorted_dst, rank] = order
+    return ell
+
+
+def build_csr(edges: np.ndarray, n_alloc: int, kind: str = "bool",
+              tail_min: int = 8) -> CSRMatrix:
+    """Pack an edge list into a :class:`CSRMatrix` over ``n_alloc`` vertices.
+
+    Arcs sort by (src, dst); ``nnz`` pads to a power-of-two bucket (always
+    leaving at least one slot free) with sentinel arcs whose ``edge_val`` is
+    the ⊕-zero (False / +inf) so they can never contribute — the sparse twin
+    of ``build_edb_index``'s EMPTY pad.  ``ell_idx`` pad entries point at
+    the last sentinel slot.  Duplicate arcs need no dedup: both carriers' ⊕
+    is idempotent.
+    """
+    src, dst, val = _pack_edges(edges, kind)
+    m = len(src)
+    n = int(max(src.max(), dst.max())) + 1 if m else 0
+    if n > n_alloc:
+        raise ValueError(f"edges reference vertex {n - 1} >= n_alloc {n_alloc}")
+    order = np.lexsort((dst, src))
+    src, dst, val = src[order], dst[order], val[order]
+    counts = np.bincount(src, minlength=n_alloc) if m else np.zeros(n_alloc, np.int64)
+    row_ptr = np.zeros(n_alloc + 1, np.int32)
+    np.cumsum(counts, out=row_ptr[1:])
+    cap = quantize_rows(m + 1)  # >= 1 sentinel slot for the ELL pads
+    sr = _semiring_of(kind)
+    pad = cap - m
+    ell = _ell_index(dst, m, n_alloc, cap - 1)
+    src = np.concatenate([src, np.zeros(pad, np.int32)])
+    dst = np.concatenate([dst, np.zeros(pad, np.int32)])
+    val = np.concatenate([val, np.full(pad, sr.zero, val.dtype)])
+    return CSRMatrix(
+        row_ptr=jnp.asarray(row_ptr), col_idx=jnp.asarray(dst),
+        edge_val=jnp.asarray(val), src_idx=jnp.asarray(src),
+        ell_idx=jnp.asarray(ell), nnz=jnp.asarray(m, jnp.int32),
+        tail_src=jnp.zeros(tail_min, jnp.int32),
+        tail_dst=jnp.zeros(tail_min, jnp.int32),
+        tail_val=jnp.full(tail_min, sr.zero, val.dtype),
+        tail_ell=jnp.full((n_alloc, 1), tail_min - 1, jnp.int32),
+        tail_nnz=jnp.asarray(0, jnp.int32),
+        n=n, n_alloc=n_alloc, kind=kind, deg_cap=ell.shape[1])
+
+
+def csr_append(csr: CSRMatrix, rows: np.ndarray,
+               rebuild_frac: float = 0.25) -> CSRMatrix:
+    """Monotone append: new arcs land in the COO tail; the CSR spine only
+    rebuilds (re-sort + repack) when the tail outgrows ``rebuild_frac`` of
+    the packed arcs, so the steady-state append is O(|ΔE|).
+
+    Arcs must stay inside ``n_alloc`` — domain growth is the caller's rebuild
+    (the serving layer re-allocates exactly like its dense twin).
+    """
+    src, dst, val = _pack_edges(rows, csr.kind)
+    if len(src) and int(max(src.max(), dst.max())) >= csr.n_alloc:
+        raise ValueError("appended arcs outgrow n_alloc; rebuild the CSR")
+    t = int(csr.tail_nnz)
+    total_tail = t + len(src)
+    spine = int(csr.nnz)
+    # the absolute floor (8) only shields tiny spines from thrashing — the
+    # threshold must NOT track tail_capacity, which re-quantizes upward on
+    # every append and would ratchet past rebuild_frac forever
+    if total_tail > max(rebuild_frac * max(spine, 1), 8):
+        merged = np.concatenate([csr.edges_numpy(),
+                                 np.asarray(rows, np.int64).reshape(len(src), -1)])
+        return build_csr(merged, csr.n_alloc, csr.kind)
+    cap = quantize_rows(total_tail + 1)  # >= 1 sentinel slot for the ELL pads
+    sr = csr.semiring
+    tsrc = np.full(cap, 0, np.int32)
+    tdst = np.full(cap, 0, np.int32)
+    tval = np.full(cap, sr.zero, np.asarray(csr.tail_val).dtype)
+    tsrc[:t] = np.asarray(csr.tail_src[:t])
+    tdst[:t] = np.asarray(csr.tail_dst[:t])
+    tval[:t] = np.asarray(csr.tail_val[:t])
+    tsrc[t:total_tail], tdst[t:total_tail], tval[t:total_tail] = src, dst, val
+    tell = _ell_index(tdst, total_tail, csr.n_alloc, cap - 1)
+    return dataclasses.replace(
+        csr, tail_src=jnp.asarray(tsrc), tail_dst=jnp.asarray(tdst),
+        tail_val=jnp.asarray(tval), tail_ell=jnp.asarray(tell),
+        tail_nnz=jnp.asarray(total_tail, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Segment-semiring SpMV steps (the jnp oracle; Pallas twins in kernels/spmv)
+# ---------------------------------------------------------------------------
+# XLA lowers a lane scatter to a serialized per-index loop on CPU — the one
+# formulation that would hand the O(|E|) advantage straight back.  The steps
+# therefore run scatter-FREE: gather every arc's source value, then ⊕-reduce
+# each destination's in-edge positions through the degree-bucketed ``ell``
+# map.  Work is O(B·(|E| + n·deg_cap)); every op is a dense gather/reduce
+# the compiler vectorizes.
+
+
+def _ell_step_or(f: jax.Array, src, val, ell) -> jax.Array:
+    contrib = f[:, src] & val  # (B, cap): frontier value at each arc source
+    return jnp.any(contrib[:, ell], axis=2)  # (B, n, deg_cap) ⊕-reduce
+
+
+def _ell_step_min(f: jax.Array, src, val, ell) -> jax.Array:
+    contrib = f[:, src] + val  # +inf sentinels never win the min
+    return jnp.min(contrib[:, ell], axis=2)
+
+
+def csr_frontier_or(frontier: jax.Array, csr: CSRMatrix) -> jax.Array:
+    """One boolean frontier step over the packed arcs: O(B·|E|).
+
+    ``frontier``: (B, n_alloc) bool (or (n_alloc,) — promoted).  Sentinel
+    arcs carry ``val=False`` and never fire; the COO tail contributes a
+    second segment pass.
+    """
+    f = frontier[None, :] if frontier.ndim == 1 else frontier
+    out = _ell_step_or(f, csr.src_idx, csr.edge_val, csr.ell_idx)
+    out = out | _ell_step_or(f, csr.tail_src, csr.tail_val, csr.tail_ell)
+    return out[0] if frontier.ndim == 1 else out
+
+
+def csr_frontier_min(frontier: jax.Array, csr: CSRMatrix) -> jax.Array:
+    """One min-plus frontier step over the packed arcs (sentinels are +inf)."""
+    f = frontier[None, :] if frontier.ndim == 1 else frontier
+    out = _ell_step_min(f, csr.src_idx, csr.edge_val, csr.ell_idx)
+    out = jnp.minimum(
+        out, _ell_step_min(f, csr.tail_src, csr.tail_val, csr.tail_ell))
+    return out[0] if frontier.ndim == 1 else out
+
+
+def csr_frontier_step(kind: str) -> Callable:
+    """Module-level step for a carrier — stable identity for jit caches."""
+    return csr_frontier_or if kind == "bool" else csr_frontier_min
+
+
+def rows_from_sources(csr: CSRMatrix, srcs) -> jax.Array:
+    """The adjacency rows ``A[srcs]`` without materializing A: seed a ⊗-one
+    one-hot frontier and take one segment step.  This is how the serving
+    layer extracts batch seeds / append-resume deltas from a CSR relation.
+    """
+    srcs = jnp.asarray(srcs, jnp.int32)
+    b = srcs.shape[0]
+    sr = csr.semiring
+    onehot = jnp.full((b, csr.n_alloc), sr.zero, sr.dtype)
+    onehot = onehot.at[jnp.arange(b), srcs].set(sr.one)
+    step = csr_frontier_step(csr.kind)
+    return step(onehot, csr)
+
+
+# ---------------------------------------------------------------------------
+# Semi-naive frontier fixpoints over CSR (twin of fixpoint_dense form=vector)
+# ---------------------------------------------------------------------------
+
+
+def fixpoint_csr(csr: CSRMatrix, init: jax.Array, spmv: Callable | None = None,
+                 max_iters: int | None = None) -> DenseResult:
+    """Sparse frontier fixpoint: ``d <- d ⊕ step(Δ-masked d)`` to closure.
+
+    Twin of ``fixpoint_dense(form="vector")`` over the packed arcs: ``init``
+    is an (n_alloc,) or batched (B, n_alloc) frontier in the carrier; rows
+    that converge drop out of the next segment step via the same per-row
+    masking.  Returns the same :class:`DenseResult` so callers (the serving
+    batcher, ``Engine.ask_dense``) swap representations freely.
+    """
+    sr = csr.semiring
+    step = spmv or csr_frontier_step(csr.kind)
+    n = init.shape[-1]
+    if max_iters is None:
+        max_iters = 4 * n + 8
+
+    def cond(s):
+        D, mask, it, gen = s
+        return jnp.any(mask) & (it < max_iters)
+
+    def body(s):
+        D, mask, it, gen = s
+        rmask = mask if D.ndim == 1 else mask[:, None]
+        dm = jnp.where(rmask, D, jnp.asarray(sr.zero, D.dtype))
+        upd = step(dm, csr)
+        Dn = sr.add(D, upd)
+        changed = _ne(sr, Dn, D)
+        gen = gen + jnp.sum(upd != jnp.asarray(sr.zero, D.dtype)).astype(jnp.int64)
+        new_mask = jnp.any(changed, axis=-1) if D.ndim > 1 else changed
+        return Dn, new_mask, it + 1, gen
+
+    mask0 = jnp.ones(init.shape[:-1] if init.ndim > 1 else init.shape, bool)
+    D, mask, it, gen = jax.lax.while_loop(
+        cond, body, (init, mask0, jnp.int32(0), jnp.int64(0)))
+    return DenseResult(D, it, gen)
+
+
+@functools.partial(jax.jit, static_argnames=("spmv", "max_iters"))
+def _fixpoint_csr_jit(csr, init, spmv, max_iters):
+    bump_trace_count()  # trace-time only: warm CSR batches must not move it
+    return fixpoint_csr(csr, init, spmv=spmv, max_iters=max_iters)
+
+
+def fixpoint_csr_cached(csr: CSRMatrix, init: jax.Array,
+                        spmv: Callable | None = None,
+                        max_iters: int | None = None) -> DenseResult:
+    """:func:`fixpoint_csr` under a shape-keyed jit (twin of
+    ``fixpoint_dense_cached``): the CSR's bucketed capacities and the padded
+    batch shape are the key, so warm serving batches skip re-tracing.
+    ``spmv`` must be a module-level callable for a stable cache key."""
+    if max_iters is None:
+        max_iters = 4 * init.shape[-1] + 8
+    return _fixpoint_csr_jit(csr, init, spmv, max_iters)
+
+
+# convenience front-ends (mirror the dense ones) ------------------------------
+
+
+def reachable_batch_csr(csr: CSRMatrix, srcs, spmv=None,
+                        max_iters: int | None = None) -> DenseResult:
+    """``?- tc(s, Y)`` for a batch of sources over packed arcs."""
+    return fixpoint_csr_cached(csr, rows_from_sources(csr, srcs), spmv=spmv,
+                               max_iters=max_iters)
+
+
+def distances_batch_csr(csr: CSRMatrix, srcs, spmv=None,
+                        max_iters: int | None = None) -> DenseResult:
+    """``?- spath(s, Z, D)`` for a batch of sources (min-plus carrier)."""
+    return fixpoint_csr_cached(csr, rows_from_sources(csr, srcs), spmv=spmv,
+                               max_iters=max_iters)

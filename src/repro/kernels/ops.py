@@ -10,12 +10,14 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from .boolmm import bool_frontier_matmul, bool_matmul
 from .flash_attention import flash_attention
 from .minplus import minplus_frontier_matmul, minplus_matmul
 from .relax import relax_step
 from .rglru_scan import rglru_scan
+from .spmv import csr_bool_spmv, csr_minplus_spmv
 
 
 def auto_interpret() -> bool:
@@ -75,3 +77,41 @@ def frontier_matmul(name: str):
     if name == "min_plus":
         return minplus_frontier
     raise KeyError(name)
+
+
+def csr_bool(frontier, src, dst, val, **kw):
+    kw.setdefault("interpret", auto_interpret())
+    return csr_bool_spmv(frontier, src, dst, val, **kw)
+
+
+def csr_minplus(frontier, src, dst, val, **kw):
+    kw.setdefault("interpret", auto_interpret())
+    return csr_minplus_spmv(frontier, src, dst, val, **kw)
+
+
+def _csr_bool_step(frontier, csr):
+    """Kernel-backed sparse frontier step (spine + COO tail); drop-in for
+    ``core.sparse.csr_frontier_or`` in ``fixpoint_csr(spmv=...)``."""
+    f = frontier[None, :] if frontier.ndim == 1 else frontier
+    out = csr_bool(f, csr.src_idx, csr.col_idx, csr.edge_val)
+    out = out | csr_bool(f, csr.tail_src, csr.tail_dst, csr.tail_val)
+    return out[0] if frontier.ndim == 1 else out
+
+
+def _csr_minplus_step(frontier, csr):
+    f = frontier[None, :] if frontier.ndim == 1 else frontier
+    out = csr_minplus(f, csr.src_idx, csr.col_idx, csr.edge_val)
+    out = jnp.minimum(
+        out, csr_minplus(f, csr.tail_src, csr.tail_dst, csr.tail_val))
+    return out[0] if frontier.ndim == 1 else out
+
+
+def csr_frontier_step(kind: str):
+    """Kernel-backed segment-semiring SpMV step for the sparse engine
+    (``kind`` is the CSR carrier: 'bool' | 'minplus').  Module-level
+    callables — stable identities for shape-keyed jit caches."""
+    if kind == "bool":
+        return _csr_bool_step
+    if kind == "minplus":
+        return _csr_minplus_step
+    raise KeyError(kind)

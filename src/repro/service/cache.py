@@ -36,6 +36,20 @@ class CacheEntry:
     #: for (``DatalogService(resume_min_hits=...)``)
     hits: int = 0
 
+    @property
+    def nbytes(self) -> int:
+        """Resident bytes: the raw carrier row an append-resume re-enters
+        from plus the formatted answer arrays — what the byte-budget resume
+        policy (``DatalogService(resume_max_bytes=...)``) charges."""
+        total = 0
+        if self.raw is not None:
+            total += int(getattr(self.raw, "nbytes", 0))
+        if self.result is not None:
+            arrays = self.result if isinstance(self.result, tuple) \
+                else (self.result,)
+            total += sum(int(getattr(a, "nbytes", 0)) for a in arrays)
+        return total
+
 
 class LRUCache:
     """Ordered-dict LRU with hit/miss/eviction counters.

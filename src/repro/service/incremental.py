@@ -97,14 +97,38 @@ def resumable_program(program: Program) -> bool:
     return program.monotone_under_appends()
 
 
-def partition_resumable(entries: list, min_hits: int) -> tuple[list, list]:
-    """Split cached (key, entry) pairs into (resume, drop) under the
-    hit-count policy: with ``min_hits <= 0`` every entry resumes (the
-    default, maintenance-free-cache behavior); otherwise only entries that
-    served at least ``min_hits`` queries since their last (re)compute stay
-    warm and the cold tail is evicted rather than recomputed."""
-    if min_hits <= 0:
+def entry_bytes(entry) -> int:
+    """Resident bytes of a cache entry (``CacheEntry.nbytes``): the raw
+    carrier row a dense resume re-enters from plus the formatted answer
+    arrays — the byte-budget resume policy charges what maintenance
+    actually keeps warm."""
+    return int(entry.nbytes)
+
+
+def partition_resumable(entries: list, min_hits: int,
+                        max_bytes: int = 0) -> tuple[list, list]:
+    """Split cached (key, entry) pairs into (resume, drop).
+
+    Two complementary policies, both off by default:
+
+    * **hit count** (``min_hits``): only entries that served at least
+      ``min_hits`` queries since their last (re)compute stay warm;
+    * **byte budget** (``max_bytes``): hit counts ignore entry *size*, so a
+      few giant closures can hog maintenance — entries resume hottest-first
+      until their cumulative :func:`entry_bytes` exceeds the budget, and the
+      oversized tail is evicted rather than maintained.
+
+    The cold tail is dropped, never recomputed (the eviction-aware resume of
+    ``DatalogService(resume_min_hits=..., resume_max_bytes=...)``)."""
+    if min_hits <= 0 and max_bytes <= 0:
         return list(entries), []
     hot = [(k, e) for k, e in entries if e.hits >= min_hits]
     cold = [(k, e) for k, e in entries if e.hits < min_hits]
+    if max_bytes > 0 and hot:
+        hot.sort(key=lambda ke: ke[1].hits, reverse=True)
+        budget, kept = 0, []
+        for k, e in hot:
+            budget += entry_bytes(e)
+            (kept if budget <= max_bytes else cold).append((k, e))
+        hot = kept
     return hot, cold

@@ -130,6 +130,11 @@ def main(argv: list[str] | None = None) -> int:
                     help="coalesce consecutive --query flags into ask_batch")
     ap.add_argument("--cache", type=int, default=1024,
                     help="result-cache capacity (0 disables)")
+    ap.add_argument("--sparse", choices=["auto", "csr", "dense"],
+                    default="auto",
+                    help="closure representation for decomposable predicates:"
+                         " csr forces the O(|E|)-per-iteration packed engine,"
+                         " dense the O(n^2) matrix, auto picks by density")
     ap.add_argument("--default-cap", type=int, default=1 << 16)
     ap.add_argument("--stats", action="store_true",
                     help="print service stats after all actions")
@@ -149,7 +154,9 @@ def main(argv: list[str] | None = None) -> int:
 
     from .session import DatalogService
     svc = DatalogService(program, db, result_cache=args.cache,
-                         default_cap=args.default_cap)
+                         default_cap=args.default_cap,
+                         sparse={"auto": None, "csr": True,
+                                 "dense": False}[args.sparse])
 
     pending: list[str] = []
 

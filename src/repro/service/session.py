@@ -28,9 +28,12 @@ that across the stream:
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 
 import jax.numpy as jnp
 import numpy as np
+
+from ..core import sparse as _sparse
 
 from ..core.engine import (CapacityError, Engine, as_query_literal,
                            query_row_mask, split_qid_answers)
@@ -56,7 +59,8 @@ class ServiceStats:
     plans_built: int = 0  # templates constructed (magic rewrite + plan)
     plan_hits: int = 0  # queries served by a memoized template
     tuple_runs: int = 0  # PSN evaluations (template engine runs)
-    dense_fixpoints: int = 0  # batched dense fixpoints launched
+    dense_fixpoints: int = 0  # batched closure fixpoints launched (any repr)
+    csr_fixpoints: int = 0  # ... of which ran the CSR-packed sparse engine
     batched_queries: int = 0  # queries answered by those fixpoints
     tuple_fixpoints: int = 0  # qid-batched tuple fixpoints launched
     tuple_batched_queries: int = 0  # queries answered by those fixpoints
@@ -76,12 +80,21 @@ def _freeze(res):
 
 
 class _DenseRelation:
-    """Dense carrier state for one decomposable predicate.
+    """Carrier state for one decomposable predicate: dense matrix OR CSR.
 
-    The (n_alloc, n_alloc) semiring matrix of the base relation builds once
-    per service (``Engine.ask_dense`` rebuilds it per call) and is maintained
-    under appends.  ``n_alloc`` rounds the live domain up to ``n_align`` so
-    small domain growth keeps the compiled fixpoint shapes stable.
+    The base relation packs once per service (``Engine.ask_dense`` rebuilds
+    per call) and is maintained under appends.  Representation is decided at
+    (re)build time: ``svc.sparse`` forces one, ``None`` lets the density
+    heuristic pick — below ``sparse_threshold`` the CSR-packed segment
+    engine (``core.sparse``, O(|E|) per iteration) replaces the
+    ``n_align``-rounded O(n²) matrix behind the *same* batching interface
+    (:meth:`seed_rows` / :meth:`run_batch`).
+
+    Appends: the dense matrix scatters arcs in place; the CSR appends them
+    to its COO tail, folding into the spine at a rebuild threshold.  Either
+    way ``n_alloc`` rounds the live domain up to ``n_align`` so small domain
+    growth keeps the compiled fixpoint shapes stable; outgrowing it rebuilds
+    (re-running the heuristic — density drifts as graphs grow).
     """
 
     def __init__(self, svc: "DatalogService", low: FrontierLowering):
@@ -90,36 +103,72 @@ class _DenseRelation:
         self.n = 0
         self.n_alloc = 0
         self.matrix = None
+        self.csr = None
         self._rebuild(svc)
 
+    @property
+    def is_csr(self) -> bool:
+        return self.csr is not None
+
     def _rebuild(self, svc: "DatalogService"):
-        edges = svc.db.get(self.low.edb, np.zeros((0, 2), np.int64))
+        arity = 2 if self.low.kind == "bool" else 3
+        edges = svc.db.get(self.low.edb, np.zeros((0, arity), np.int64))
         n = int(edges[:, :2].max()) + 1 if len(edges) else 0
         align = svc.n_align
         self.n = n
         self.n_alloc = max(((n + align - 1) // align) * align, align)
-        if self.low.kind == "bool":
+        use_csr = svc.sparse
+        if use_csr is None:
+            # density over the LIVE domain (the same |E|/n² cut as
+            # Engine.ask_dense), not the align-padded allocation
+            use_csr = _sparse.prefer_csr(len(edges), n, svc.sparse_threshold)
+        if use_csr:
+            self.matrix = None
+            self.csr = _sparse.build_csr(edges, self.n_alloc, self.low.kind)
+        elif self.low.kind == "bool":
+            self.csr = None
             adj = np.zeros((self.n_alloc, self.n_alloc), bool)
             if len(edges):
                 adj[edges[:, 0], edges[:, 1]] = True
             self.matrix = jnp.asarray(adj)
         else:
+            self.csr = None
             w = np.full((self.n_alloc, self.n_alloc), np.inf, np.float32)
             if len(edges):
                 np.minimum.at(w, (edges[:, 0], edges[:, 1]),
                               edges[:, 2].astype(np.float32))
             self.matrix = jnp.asarray(w)
 
+    def seed_rows(self, srcs) -> jnp.ndarray:
+        """The (B, n_alloc) frontier rows ``A[srcs]`` in the carrier."""
+        if self.is_csr:
+            return _sparse.rows_from_sources(self.csr, srcs)
+        return self.matrix[jnp.asarray(srcs)]
+
+    def run_batch(self, svc: "DatalogService", srcs: list[int], init=None):
+        """One batched frontier fixpoint over this relation's representation
+        (``init`` overrides the seed — append-resume)."""
+        if self.is_csr:
+            return _batch.run_frontier_batch_csr(
+                self.csr, srcs, svc.batch_pads, spmv=svc._spmv(self.low.kind),
+                mesh=svc.mesh, init=init)
+        return _batch.run_frontier_batch(
+            self.sr, self.matrix, srcs, svc.batch_pads,
+            matmul=svc._matmul(self.sr), mesh=svc.mesh, init=init)
+
     def append(self, svc: "DatalogService", rows: np.ndarray) -> bool:
-        """Fold appended arcs into the matrix; returns True when the domain
-        outgrew the allocation (a rebuild — cached rows need re-padding)."""
+        """Fold appended arcs in; returns True when the domain outgrew the
+        allocation (a rebuild — cached rows need re-padding)."""
         new_n = max(self.n, int(rows[:, :2].max()) + 1 if len(rows) else 0)
         if new_n > self.n_alloc:
             self._rebuild(svc)  # svc.db already holds the appended relation
             return True
         self.n = new_n
         if len(rows):
-            if self.low.kind == "bool":
+            if self.is_csr:
+                self.csr = _sparse.csr_append(self.csr, rows,
+                                              svc.csr_rebuild_frac)
+            elif self.low.kind == "bool":
                 self.matrix = self.matrix.at[rows[:, 0], rows[:, 1]].set(True)
             else:
                 self.matrix = self.matrix.at[rows[:, 0], rows[:, 1]].min(
@@ -148,10 +197,15 @@ class _QueryTemplate:
         self._model_fresh = False
         self._mr = None
         self._qid_engine: Engine | None = None
-        self._snap: _inc.TupleSnapshot | None = None
+        #: LRU of the last K batches' fixpoint snapshots (K =
+        #: ``DatalogService(snapshot_lru=...)``) keyed by the batch's query
+        #: cache keys — several hot batches stay append-resumable, not just
+        #: the most recent one
+        self._snaps: "OrderedDict[tuple, _inc.TupleSnapshot]" = OrderedDict()
         self._eng_kw = eng_kw = dict(bits=svc.bits, default_cap=svc.default_cap,
                                      join_cap=svc.join_cap,
-                                     max_iters=svc.max_iters)
+                                     max_iters=svc.max_iters,
+                                     bucket_floors=svc.bucket_floors)
         try:
             mr = magic_rewrite(svc.program, q)
             caps = dict(svc.caps)
@@ -253,10 +307,18 @@ class _QueryTemplate:
         eng.invalidate(self.seed_rel)
         eng.run()
         out = self._split(eng, qlits)
-        self._snap = _inc.TupleSnapshot(
-            seeds=seeds, qlits=list(qlits),
-            state=dict(eng.materialized)) if self.resumable else None
+        if self.resumable and svc.snapshot_lru > 0:
+            self._store_snap(svc, tuple(svc._cache_key(q) for q in qlits),
+                             _inc.TupleSnapshot(seeds=seeds, qlits=list(qlits),
+                                                state=dict(eng.materialized)))
         return out
+
+    def _store_snap(self, svc: "DatalogService", key: tuple,
+                    snap: _inc.TupleSnapshot) -> None:
+        self._snaps[key] = snap
+        self._snaps.move_to_end(key)
+        while len(self._snaps) > svc.snapshot_lru:
+            self._snaps.popitem(last=False)
 
     def _split(self, eng: Engine, qlits: list[Literal], qids=None) -> list:
         """Per-seed attribution (``engine.split_qid_answers``): the qid
@@ -267,20 +329,20 @@ class _QueryTemplate:
         return split_qid_answers(self.result_pred, rows, vals, info, qlits,
                                  qids=qids)
 
-    def resume_batch(self, svc: "DatalogService",
+    def resume_batch(self, svc: "DatalogService", snap_key: tuple,
                      keep: list[int] | None = None) -> list | None:
-        """Re-run the last batch warm-started from its snapshot (same seeds,
-        post-append EDB); returns [(qlit, answer)] for the cache refresh, or
-        None when there is nothing to resume.
+        """Re-run one snapshotted batch warm-started from its fixpoint state
+        (same seeds, post-append EDB); returns [(qlit, answer)] for the cache
+        refresh, or None when there is nothing to resume.
 
         ``keep`` restricts the resume to those snapshot positions (the
         eviction-aware policy's hot entries): cold seeds and their warm rows
         are filtered OUT of the re-entered fixpoint and the new snapshot, so
         future appends never pay their demand propagation again.
         """
-        if self._snap is None or not self.resumable:
+        snap = self._snaps.get(snap_key)
+        if snap is None or not self.resumable:
             return None
-        snap = self._snap
         idx = list(range(len(snap.qlits))) if keep is None else sorted(keep)
         seeds = snap.seeds[idx]
         qids = [int(q) for q in seeds[:, 0]]  # original tags, non-contiguous
@@ -296,7 +358,7 @@ class _QueryTemplate:
         eng.invalidate(self.seed_rel)
         eng.run(warm=state)
         out = self._split(eng, qlits, qids=qids)
-        self._snap = _inc.TupleSnapshot(
+        self._snaps[snap_key] = _inc.TupleSnapshot(
             seeds=seeds, qlits=qlits, state=dict(eng.materialized))
         return list(zip(qlits, out))
 
@@ -308,7 +370,7 @@ class _QueryTemplate:
             eng.invalidate(rel)
         self._model_fresh = False
         if not self.resumable:
-            self._snap = None
+            self._snaps.clear()
 
 
 class DatalogService:
@@ -331,6 +393,24 @@ class DatalogService:
                       (re)compute are *dropped* on append instead of
                       resumed (0 = resume everything, the maintenance-free
                       default).
+    ``resume_max_bytes``  byte-budget complement to ``resume_min_hits``:
+                      per maintenance pass, entries resume hottest-first
+                      until their cumulative resident bytes exceed the
+                      budget; the oversized tail is dropped (0 = no budget).
+    ``sparse``        closure representation for decomposable predicates:
+                      True forces the CSR-packed O(|E|)-per-iteration
+                      engine, False forces the dense matrix, None (default)
+                      picks per relation by density (< ``sparse_threshold``
+                      -> CSR).
+    ``sparse_threshold``  the heuristic's |E|/n² cut (None = library
+                      default, ``core.sparse.DEFAULT_SPARSE_THRESHOLD``).
+    ``csr_rebuild_frac``  appended arcs fold from the CSR's COO tail into
+                      the spine when the tail outgrows this fraction of it.
+    ``snapshot_lru``  batched tuple templates keep their last K batches'
+                      fixpoint snapshots append-resumable (1 = the
+                      last-batch-only legacy behavior; 0 disables).
+    ``bucket_floors`` per-relation ``quantize_rows`` floors threaded into
+                      every engine (see ``benchmarks/bench_buckets.py``).
     """
 
     def __init__(self, program, db: dict[str, np.ndarray], *, bits: int = 18,
@@ -339,7 +419,11 @@ class DatalogService:
                  constants: dict[str, int] | None = None,
                  result_cache: int = 1024, matmul=None, mesh=None,
                  batch_pads: tuple[int, ...] = (1, 8, 32, 128),
-                 n_align: int = 128, resume_min_hits: int = 0):
+                 n_align: int = 128, resume_min_hits: int = 0,
+                 resume_max_bytes: int = 0, sparse: bool | None = None,
+                 sparse_threshold: float | None = None,
+                 csr_rebuild_frac: float = 0.25, snapshot_lru: int = 1,
+                 bucket_floors: dict[str, int] | None = None):
         if isinstance(program, str):
             program = parse_program(program, constants=constants)
         self.program = program
@@ -352,12 +436,21 @@ class DatalogService:
         self.batch_pads = tuple(batch_pads)
         self.n_align = n_align
         self.resume_min_hits = resume_min_hits
+        self.resume_max_bytes = resume_max_bytes
+        self.sparse = sparse
+        self.sparse_threshold = (sparse_threshold
+                                 if sparse_threshold is not None
+                                 else _sparse.DEFAULT_SPARSE_THRESHOLD)
+        self.csr_rebuild_frac = csr_rebuild_frac
+        self.snapshot_lru = snapshot_lru
+        self.bucket_floors = dict(bucket_floors or {})
         self._matmul_opt = matmul
         # the base engine owns db normalization + domain validation; sharing
         # its dict means appends propagate without copying
         self._base = Engine(program, db=db, bits=bits, caps=self.caps,
                             default_cap=default_cap, join_cap=join_cap,
-                            max_iters=max_iters)
+                            max_iters=max_iters,
+                            bucket_floors=self.bucket_floors)
         self.db = self._base.db
         self.epoch = 0
         self.stats = ServiceStats()
@@ -472,38 +565,41 @@ class DatalogService:
         are dropped, and only still-cached hot answers refresh."""
         refreshed: dict = {}
         for tpl in self._templates.values():
-            if tpl._snap is None:
-                continue
-            keys = [self._cache_key(q) for q in tpl._snap.qlits]
-            cached = [(k, self.cache.peek(k)) for k in keys]
-            if rel not in tpl.reads:
-                # the template's program never reads the appended relation:
-                # its answers are untouched — revalidate, don't re-run
-                for k, e in cached:
-                    if e is not None:
-                        e.epoch = self.epoch
-                        refreshed[k] = e
-                continue
-            hot, cold = _inc.partition_resumable(
-                [((i, k), e) for i, (k, e) in enumerate(cached)
-                 if e is not None], self.resume_min_hits)
-            self.stats.dropped_cold += len(cold)
-            if not hot:
-                tpl._snap = None
-                continue
-            try:
-                # cold positions are filtered out of the resumed fixpoint
-                # (and the next snapshot) entirely — never maintained again
-                pairs = tpl.resume_batch(self, keep=[i for (i, _), _ in hot])
-            except (PlanError, CapacityError, ValueError):
-                tpl._snap = None
-                continue
-            for q, res in pairs:
-                key = self._cache_key(q)
-                ent = CacheEntry("tuple", tpl.pred, _freeze(res), self.epoch)
-                self.cache.replace(key, ent)
-                refreshed[key] = ent
-                self.stats.resumed_tuple_rows += 1
+            for skey in list(tpl._snaps):  # LRU of the last K batches
+                snap = tpl._snaps[skey]
+                keys = [self._cache_key(q) for q in snap.qlits]
+                cached = [(k, self.cache.peek(k)) for k in keys]
+                if rel not in tpl.reads:
+                    # the template's program never reads the appended
+                    # relation: its answers are untouched — revalidate
+                    for k, e in cached:
+                        if e is not None:
+                            e.epoch = self.epoch
+                            refreshed[k] = e
+                    continue
+                hot, cold = _inc.partition_resumable(
+                    [((i, k), e) for i, (k, e) in enumerate(cached)
+                     if e is not None], self.resume_min_hits,
+                    self.resume_max_bytes)
+                self.stats.dropped_cold += len(cold)
+                if not hot:
+                    del tpl._snaps[skey]
+                    continue
+                try:
+                    # cold positions are filtered out of the resumed fixpoint
+                    # (and the next snapshot) entirely — never maintained
+                    pairs = tpl.resume_batch(
+                        self, skey, keep=[i for (i, _), _ in hot])
+                except (PlanError, CapacityError, ValueError):
+                    tpl._snaps.pop(skey, None)
+                    continue
+                for q, res in pairs:
+                    key = self._cache_key(q)
+                    ent = CacheEntry("tuple", tpl.pred, _freeze(res),
+                                     self.epoch)
+                    self.cache.replace(key, ent)
+                    refreshed[key] = ent
+                    self.stats.resumed_tuple_rows += 1
         return refreshed
 
     # -- introspection -------------------------------------------------------
@@ -517,9 +613,14 @@ class DatalogService:
                       "evictions": self.cache.evictions},
             "templates": sorted(
                 f"{p}/{a}" + ("+qid" if t.batchable else "")
+                + (f"+snap{len(t._snaps)}" if t._snaps else "")
                 for (p, a), t in self._templates.items()),
             "dense": {p: {"n": ds.n, "n_alloc": ds.n_alloc,
-                          "semiring": ds.sr.name}
+                          "semiring": ds.sr.name,
+                          "repr": "csr" if ds.is_csr else "dense",
+                          **({"nnz": int(ds.csr.nnz) + int(ds.csr.tail_nnz),
+                              "density": ds.csr.density()}
+                             if ds.is_csr else {})}
                       for p, ds in self._dense.items()},
         }
 
@@ -584,6 +685,15 @@ class DatalogService:
             return kops.frontier_matmul(sr.name)
         return self._matmul_opt
 
+    def _spmv(self, kind: str):
+        """Sparse segment-step override (the CSR twin of ``_matmul``): the
+        ``matmul='pallas'`` option maps onto the segment-semiring SpMV
+        kernels; arbitrary dense callables stay dense-only."""
+        if self._matmul_opt == "pallas":
+            from ..kernels import ops as kops
+            return kops.csr_frontier_step(kind)
+        return None
+
     def _format(self, ds: _DenseRelation, src: int, row):
         if ds.low.kind == "bool":
             return _batch.format_bool_row(src, row, ds.n)
@@ -607,10 +717,9 @@ class DatalogService:
         in_range = [s for s in uniq if s < ds.n_alloc]
         results: dict[int, object] = {}
         if in_range:
-            res = _batch.run_frontier_batch(
-                ds.sr, ds.matrix, in_range, self.batch_pads,
-                matmul=self._matmul(ds.sr), mesh=self.mesh)
+            res = ds.run_batch(self, in_range)
             self.stats.dense_fixpoints += 1
+            self.stats.csr_fixpoints += 1 if ds.is_csr else 0
             self.stats.batched_queries += len(in_range)
             for j, s in enumerate(in_range):
                 results[s] = self._format(ds, s, res.table[j])
@@ -633,7 +742,8 @@ class DatalogService:
         grown = ds.append(self, new_rows)
         entries, cold = _inc.partition_resumable(
             [(k, e) for k, e in self.cache.items()
-             if e.kind == "dense" and e.pred == pred], self.resume_min_hits)
+             if e.kind == "dense" and e.pred == pred], self.resume_min_hits,
+            self.resume_max_bytes)
         if cold:  # eviction-aware resume: drop the cold tail, don't maintain it
             cold_keys = {k for k, _ in cold}
             self.stats.dropped_cold += self.cache.drop_where(
@@ -644,12 +754,11 @@ class DatalogService:
         prev = jnp.stack([e.raw for _, e in entries])
         if grown:
             prev = _inc.pad_rows(prev, ds.n_alloc, ds.sr.zero)
-        seed = ds.matrix[jnp.asarray(srcs)]
-        table = _batch.run_frontier_batch(
-            ds.sr, ds.matrix, srcs, self.batch_pads,
-            matmul=self._matmul(ds.sr), mesh=self.mesh,
-            init=_inc.resume_init(ds.sr, prev, seed)).table
+        seed = ds.seed_rows(srcs)
+        table = ds.run_batch(self, srcs,
+                             init=_inc.resume_init(ds.sr, prev, seed)).table
         self.stats.dense_fixpoints += 1
+        self.stats.csr_fixpoints += 1 if ds.is_csr else 0
         self.stats.resumed_rows += len(entries)
         for j, (key, e) in enumerate(entries):
             # result=None defers answer formatting to the entry's next hit —

@@ -116,6 +116,38 @@ def ref_model(program, db):
     return model
 
 
+def ref_reachable(edges, src: int) -> set:
+    """Oracle for single-source reachability over an (m, 2) edge list — the
+    graph-level twin of ``ref_model`` on the TC program, used by the CSR
+    differential tests without paying the full naive rule evaluator."""
+    adj = {}
+    for a, b in edges:
+        adj.setdefault(int(a), set()).add(int(b))
+    seen, frontier = set(), set(adj.get(int(src), set()))
+    while frontier:
+        seen |= frontier
+        frontier = {c for v in frontier for c in adj.get(v, set())} - seen
+    return seen
+
+
+def ref_distances(edges, src: int) -> dict:
+    """Oracle for single-source shortest distances over (m, 3) weighted
+    arcs (Bellman-Ford over Python dicts)."""
+    dist = {}
+    rows = [(int(a), int(b), int(w)) for a, b, w in edges]
+    for a, b, w in rows:
+        if a == int(src):
+            dist[b] = min(dist.get(b, w), w)
+    changed = True
+    while changed:
+        changed = False
+        for a, b, w in rows:
+            if a in dist and dist[a] + w < dist.get(b, float("inf")):
+                dist[b] = dist[a] + w
+                changed = True
+    return dist
+
+
 def ref_answer(model, q: Literal) -> set:
     """Filter a model by a query goal: constants match their position,
     repeated variables must be pairwise equal (``tc(X, X)``)."""

@@ -11,6 +11,10 @@ fixpoint over Python sets — on SIX evaluation paths:
   4. ``DatalogService`` cached   (second batch = pure result-cache hits)
   5. ``DatalogService.ask_batch`` (dense micro-batch / qid-tagged tuple batch)
   6. append-resume               (serve, monotone append, re-serve)
+  7. CSR-forced serving          (``sparse=True``: the packed O(|E|) frontier
+                                 engine behind the same batching interface,
+                                 batched + append-resume; answers must be
+                                 bit-identical to the dense service's)
 
 Case count defaults to a CI-smoke size; ``DIFF_CASES=200 pytest
 tests/test_differential.py`` runs the acceptance-sized sweep (the generator
@@ -137,12 +141,24 @@ def test_differential(case):
 
     # 4./5. service batched then cached (second round = pure cache hits)
     svc = DatalogService(text, db=db, **CAPS)
-    for i, got in enumerate(svc.ask_batch(queries)):
+    dense_res = svc.ask_batch(queries)
+    for i, got in enumerate(dense_res):
         check("service-batch", case, queries[i], got, want[i])
     h0 = svc.cache.hits
     for i, got in enumerate(svc.ask_batch(queries)):
         check("service-cached", case, queries[i], got, want[i])
     assert svc.cache.hits > h0
+
+    # 7. CSR-forced serving: the sparse frontier engine must agree with the
+    # oracle AND be bit-identical to the dense service's formatted answers
+    svc_csr = DatalogService(text, db=db, sparse=True, **CAPS)
+    for i, got in enumerate(svc_csr.ask_batch(queries)):
+        check("service-csr", case, queries[i], got, want[i])
+        d = dense_res[i]
+        for a, b in zip(d if isinstance(d, tuple) else (d,),
+                        got if isinstance(got, tuple) else (got,)):
+            assert np.array_equal(a, b), \
+                f"case={case} query={queries[i]!r}: dense/CSR not bit-identical"
 
     # 6. append-resume: serve a prefix EDB, append the tail, re-serve
     rel = SHAPES[shape][2][0]
@@ -155,6 +171,12 @@ def test_differential(case):
         svc2.append(rel, db[rel][-k:])
         for i, got in enumerate(svc2.ask_batch(queries)):
             check("append-resume", case, queries[i], got, want[i])
+        # CSR twin: resume the packed-arc closures (COO-tail append path)
+        svc3 = DatalogService(text, db=base, sparse=True, **CAPS)
+        svc3.ask_batch(queries)
+        svc3.append(rel, db[rel][-k:])
+        for i, got in enumerate(svc3.ask_batch(queries)):
+            check("append-resume-csr", case, queries[i], got, want[i])
 
 
 # -- hypothesis variant (runs when hypothesis is installed) ------------------

@@ -1,0 +1,331 @@
+"""CSR-packed sparse frontier engine: representation, fixpoints, serving.
+
+Dense-vs-CSR differential coverage at the unit level (the randomized sweep
+lives in ``test_differential.py``): build/append round-trips, closure
+equality across densities (batched + append-resume), the density heuristic's
+routing, per-relation bucket floors, and the snapshot-LRU / byte-budget
+eviction policies that ride along this PR.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from _reference import ref_distances, ref_reachable
+
+from repro.core import sparse
+from repro.core.engine import Engine
+from repro.core.seminaive import (distances_batch_dense, quantize_rows,
+                                  reachable_batch_dense)
+from repro.service import DatalogService
+
+TC = """
+tc(X,Y) <- arc(X,Y).
+tc(X,Y) <- tc(X,Z), arc(Z,Y).
+"""
+
+DPATH = """
+dpath(X,Z,min<D>) <- w(X,Z,D).
+dpath(X,Z,min<D>) <- dpath(X,Y,D1), w(Y,Z,D2), D = D1 + D2.
+"""
+
+SG = """
+sg(X,Y) <- arc(P,X), arc(P,Y), X != Y.
+sg(X,Y) <- arc(A,X), sg(A,B), arc(B,Y).
+"""
+
+
+def rand_edges(n, p, seed=0, weighted=False):
+    rng = np.random.default_rng(seed)
+    mask = rng.random((n, n)) < p
+    np.fill_diagonal(mask, False)
+    src, dst = np.nonzero(mask)
+    edges = np.stack([src, dst], axis=1).astype(np.int64)
+    if weighted:
+        edges = np.concatenate(
+            [edges, rng.integers(1, 9, (len(edges), 1))], axis=1)
+    return edges
+
+
+def rows_set(rows):
+    return {tuple(map(int, r)) for r in rows}
+
+
+# ---------------------------------------------------------------------------
+# representation
+# ---------------------------------------------------------------------------
+
+
+def test_build_csr_roundtrip_and_buckets():
+    edges = rand_edges(50, 0.05, seed=1)
+    csr = sparse.build_csr(edges, 64, "bool")
+    assert csr.n_alloc == 64 and int(csr.nnz) == len(edges)
+    # padded to the bucket, always leaving a sentinel slot for the ELL pads
+    assert csr.capacity == quantize_rows(len(edges) + 1)
+    assert csr.deg_cap == quantize_rows(  # degree bucket = max IN-degree
+        int(np.bincount(edges[:, 1]).max()), minimum=1)
+    assert csr.ell_idx.shape == (64, csr.deg_cap)
+    assert rows_set(csr.edges_numpy()) == rows_set(edges)
+    # row_ptr spans each source's out-edges
+    rp = np.asarray(csr.row_ptr)
+    for v in range(64):
+        assert rp[v + 1] - rp[v] == np.sum(edges[:, 0] == v)
+
+
+def test_build_csr_rejects_out_of_domain():
+    with pytest.raises(ValueError):
+        sparse.build_csr(np.array([[0, 70]], np.int64), 64, "bool")
+    with pytest.raises(ValueError):
+        sparse.build_csr(np.array([[0, 1]], np.int64), 64, "minplus")  # 2 cols
+
+
+def test_csr_append_tail_then_rebuild():
+    edges = rand_edges(50, 0.08, seed=2)
+    csr = sparse.build_csr(edges, 64, "bool")
+    small = np.array([[0, 63], [63, 1]], np.int64)
+    c2 = sparse.csr_append(csr, small)
+    assert int(c2.tail_nnz) == 2 and int(c2.nnz) == len(edges)  # COO tail
+    big = rand_edges(60, 0.05, seed=3)
+    c3 = sparse.csr_append(c2, big)
+    assert int(c3.tail_nnz) == 0  # tail outgrew the threshold: spine rebuilt
+    assert rows_set(c3.edges_numpy()) == \
+        rows_set(edges) | rows_set(small) | rows_set(big)
+    with pytest.raises(ValueError):
+        sparse.csr_append(c3, np.array([[64, 0]], np.int64))  # outgrows n_alloc
+
+
+def test_prefer_csr_heuristic():
+    assert sparse.prefer_csr(100, 1024)  # ~1e-4 density
+    assert not sparse.prefer_csr(1 << 19, 1024)  # half-full matrix
+    assert not sparse.prefer_csr(0, 0)
+    assert sparse.prefer_csr(10**4, 10**4, threshold=1.0)
+
+
+# ---------------------------------------------------------------------------
+# fixpoints: dense-vs-CSR closure equality across densities
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("p", [0.002, 0.02, 0.1, 0.3])
+def test_bool_closure_matches_dense_across_densities(p):
+    n = 96
+    edges = rand_edges(n, p, seed=int(p * 1000))
+    if not len(edges):
+        pytest.skip("empty graph draw")
+    csr = sparse.build_csr(edges, n, "bool")
+    adj = np.zeros((n, n), bool)
+    adj[edges[:, 0], edges[:, 1]] = True
+    srcs = [0, 5, 17, 42, 95]
+    want = reachable_batch_dense(jnp.asarray(adj), srcs)
+    got = sparse.reachable_batch_csr(csr, srcs)
+    assert jnp.array_equal(want.table, got.table)
+    assert int(want.iterations) == int(got.iterations)
+    # spot-check one row against the set-based oracle
+    assert set(np.nonzero(np.asarray(got.table[1]))[0].tolist()) == \
+        ref_reachable(edges, 5)
+
+
+@pytest.mark.parametrize("p", [0.02, 0.15])
+def test_minplus_closure_matches_dense(p):
+    n = 72
+    edges = rand_edges(n, p, seed=7, weighted=True)
+    csr = sparse.build_csr(edges, n, "minplus")
+    w = np.full((n, n), np.inf, np.float32)
+    np.minimum.at(w, (edges[:, 0], edges[:, 1]), edges[:, 2].astype(np.float32))
+    srcs = [0, 9, 33]
+    want = distances_batch_dense(jnp.asarray(w), srcs)
+    got = sparse.distances_batch_csr(csr, srcs)
+    assert jnp.array_equal(want.table, got.table)
+    d = np.asarray(got.table[1])
+    assert {k: int(v) for k, v in ref_distances(edges, 9).items()} == \
+        {int(i): int(d[i]) for i in np.nonzero(np.isfinite(d[:n]))[0]}
+
+
+def test_rows_from_sources_equals_adjacency_rows():
+    edges = rand_edges(40, 0.1, seed=4)
+    csr = sparse.build_csr(edges, 40, "bool")
+    adj = np.zeros((40, 40), bool)
+    adj[edges[:, 0], edges[:, 1]] = True
+    srcs = [3, 3, 11, 39]  # duplicates allowed
+    assert jnp.array_equal(sparse.rows_from_sources(csr, srcs),
+                           jnp.asarray(adj)[jnp.asarray(srcs)])
+
+
+def test_csr_tail_append_keeps_compiled_shapes():
+    """A small tail append that stays inside the tail's shape bucket (and
+    the live domain) must NOT re-trace the cached fixpoint — nnz counts are
+    traced scalars and build-time metadata is frozen."""
+    from repro.core.engine import fixpoint_trace_count
+    edges = rand_edges(60, 0.03, seed=21)
+    csr = sparse.build_csr(edges, 64, "bool")
+    srcs = [0, 7, 21]
+    sparse.reachable_batch_csr(csr, srcs)  # compile
+    t0 = fixpoint_trace_count()
+    csr2 = sparse.csr_append(csr, np.array([[0, 59], [59, 2]], np.int64))
+    assert int(csr2.tail_nnz) == 2
+    got = sparse.reachable_batch_csr(csr2, srcs)
+    assert fixpoint_trace_count() == t0, "tail append re-traced the fixpoint"
+    cold = sparse.reachable_batch_csr(
+        sparse.build_csr(np.concatenate([edges, [[0, 59], [59, 2]]]), 64,
+                         "bool"), srcs)
+    assert jnp.array_equal(got.table, cold.table)
+
+
+def test_fixpoint_resumes_from_closure_after_append():
+    """resume_init(prev, seed) over an appended CSR converges to the new
+    closure — the serving layer's incremental path at the engine level."""
+    edges = rand_edges(60, 0.03, seed=11)
+    csr = sparse.build_csr(edges, 64, "bool")
+    srcs = [0, 7, 21]
+    prev = sparse.reachable_batch_csr(csr, srcs).table
+    new = np.array([[7, 59], [59, 60], [60, 61]], np.int64)
+    csr2 = sparse.csr_append(csr, new)
+    resumed = sparse.fixpoint_csr_cached(
+        csr2, prev | sparse.rows_from_sources(csr2, srcs)).table
+    cold = sparse.reachable_batch_csr(
+        sparse.build_csr(np.concatenate([edges, new]), 64, "bool"), srcs).table
+    assert jnp.array_equal(resumed, cold)
+
+
+# ---------------------------------------------------------------------------
+# serving integration: routing, appends, explain
+# ---------------------------------------------------------------------------
+
+
+def test_service_auto_heuristic_routes_by_density():
+    sparse_edges = rand_edges(256, 0.004, seed=5)  # below the 1/64 cut
+    dense_edges = rand_edges(64, 0.3, seed=6)  # far above it
+    s1 = DatalogService(TC, db={"arc": sparse_edges})
+    s2 = DatalogService(TC, db={"arc": dense_edges})
+    s1.ask("tc", (0, None))
+    s2.ask("tc", (0, None))
+    assert s1.explain()["dense"]["tc"]["repr"] == "csr"
+    assert s2.explain()["dense"]["tc"]["repr"] == "dense"
+    assert s1.stats.csr_fixpoints == 1 and s2.stats.csr_fixpoints == 0
+
+
+def test_service_forced_repr_and_equality():
+    edges = rand_edges(128, 0.03, seed=8)
+    qs = [("tc", (s, None)) for s in [0, 3, 17, 90]]
+    res_d = DatalogService(TC, db={"arc": edges}, sparse=False).ask_batch(qs)
+    res_c = DatalogService(TC, db={"arc": edges}, sparse=True).ask_batch(qs)
+    for a, b in zip(res_d, res_c):
+        assert np.array_equal(a, b)  # bit-identical formatted answers
+
+
+def test_service_csr_append_resume_matches_recompute():
+    edges = rand_edges(128, 0.02, seed=9)
+    new = np.array([[0, 120], [120, 121], [5, 0]], np.int64)
+    qs = [("tc", (s, None)) for s in [0, 5, 64]]
+    svc = DatalogService(TC, db={"arc": edges}, sparse=True)
+    svc.ask_batch(qs)
+    svc.append("arc", new)
+    assert svc.stats.resumed_rows == 3
+    fresh = DatalogService(TC, db={"arc": np.concatenate([edges, new])},
+                           sparse=True)
+    for got, want in zip(svc.ask_batch(qs), fresh.ask_batch(qs)):
+        assert np.array_equal(got, want)
+
+
+def test_service_csr_domain_growth_rebuilds():
+    edges = rand_edges(100, 0.02, seed=10)
+    svc = DatalogService(TC, db={"arc": edges}, sparse=True, n_align=128)
+    svc.ask("tc", (0, None))
+    svc.append("arc", np.array([[0, 200]], np.int64))  # past n_alloc=128
+    ds = svc._dense["tc"]
+    assert ds.n_alloc == 256 and ds.is_csr
+    assert rows_set(svc.ask("tc", (200, None))) == set()
+    want = DatalogService(
+        TC, db={"arc": np.concatenate([edges, [[0, 200]]])}, sparse=False)
+    assert np.array_equal(svc.ask("tc", (0, None)), want.ask("tc", (0, None)))
+
+
+def test_engine_ask_dense_sparse_knob():
+    edges = rand_edges(96, 0.02, seed=12)
+    eng = Engine(TC, db={"arc": edges})
+    a = eng.ask_dense("tc", (3, None), sparse=False)
+    b = eng.ask_dense("tc", (3, None), sparse=True)
+    assert np.array_equal(a, b)
+    assert "tc__dense" in eng.stats and "tc__csr" in eng.stats
+    # constructor-level knob flows through PlanOptions
+    eng_s = Engine(TC, db={"arc": edges}, sparse=True)
+    assert np.array_equal(eng_s.ask_dense("tc", (3, None)), a)
+    assert "tc__csr" in eng_s.stats and "tc__dense" not in eng_s.stats
+
+
+# ---------------------------------------------------------------------------
+# satellites: bucket floors, snapshot LRU, byte-budget eviction
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_floors_pin_index_shapes():
+    edges = rand_edges(40, 0.02, seed=13)
+    floor = 4096
+    eng = Engine(TC, db={"arc": edges}, bucket_floors={"arc": floor})
+    idx = eng._index("arc", (0,))
+    assert idx.keys.shape[0] == floor  # pinned, not quantize_rows(len(edges))
+    eng2 = Engine(TC, db={"arc": edges})
+    assert eng2._index("arc", (0,)).keys.shape[0] == quantize_rows(len(edges))
+    # floors flow through the service and must not change answers
+    svc = DatalogService(TC, db={"arc": edges}, bucket_floors={"arc": floor})
+    assert rows_set(svc.ask("tc", (0, None))) == \
+        rows_set(eng2.ask("tc", (0, None)))
+
+
+def test_snapshot_lru_keeps_k_batches_warm():
+    arc = np.array([[0, 2], [0, 3], [1, 4], [1, 5], [2, 6], [3, 7], [4, 8],
+                    [2, 9], [3, 10]], np.int64)
+    b1 = [("sg", (2, None)), ("sg", (3, None))]
+    b2 = [("sg", (6, None)), ("sg", (7, None))]
+    svc = DatalogService(SG, db={"arc": arc}, default_cap=4096, snapshot_lru=2)
+    svc.ask_batch(b1)
+    svc.ask_batch(b2)
+    (tpl,) = svc._templates.values()
+    assert len(tpl._snaps) == 2
+    svc.append("arc", [[8, 11]])
+    assert svc.stats.resumed_tuple_rows == 4  # BOTH batches resumed
+    fresh = DatalogService(SG, db={"arc": np.concatenate([arc, [[8, 11]]])},
+                           default_cap=4096)
+    for q, got in zip(b1 + b2, svc.ask_batch(b1 + b2)):
+        assert rows_set(got) == rows_set(fresh.ask(*q)), q
+    # K=1 (the default): only the last batch stays resumable
+    svc1 = DatalogService(SG, db={"arc": arc}, default_cap=4096)
+    svc1.ask_batch(b1)
+    svc1.ask_batch(b2)
+    svc1.append("arc", [[8, 11]])
+    assert svc1.stats.resumed_tuple_rows == 2
+    # K=0 disables snapshots entirely
+    svc0 = DatalogService(SG, db={"arc": arc}, default_cap=4096,
+                          snapshot_lru=0)
+    svc0.ask_batch(b1)
+    assert not list(svc0._templates.values())[0]._snaps
+    svc0.append("arc", [[8, 11]])
+    assert svc0.stats.resumed_tuple_rows == 0
+
+
+def test_resume_max_bytes_drops_oversized_tail():
+    edges = rand_edges(128, 0.03, seed=14)
+    qs = [("tc", (i, None)) for i in range(6)]
+    tiny = DatalogService(TC, db={"arc": edges}, resume_max_bytes=1)
+    tiny.ask_batch(qs)
+    tiny.append("arc", [[0, 100]])
+    assert tiny.stats.dropped_cold == 6 and tiny.stats.resumed_rows == 0
+    roomy = DatalogService(TC, db={"arc": edges}, resume_max_bytes=1 << 30)
+    roomy.ask_batch(qs)
+    roomy.append("arc", [[0, 100]])
+    assert roomy.stats.resumed_rows == 6 and roomy.stats.dropped_cold == 0
+    # budget composes with hit counts: the hottest entry fits, the rest drop
+    one = DatalogService(TC, db={"arc": edges}, resume_max_bytes=1 << 30)
+    one.ask_batch(qs)
+    one.ask("tc", (2, None))  # bump hits on one entry
+    one.resume_max_bytes = _one_entry_budget(one)
+    one.append("arc", [[0, 101]])
+    assert one.stats.resumed_rows == 1 and one.stats.dropped_cold == 5
+    # the surviving entry serves the post-append answer correctly
+    fresh = DatalogService(TC, db={"arc": np.concatenate([edges, [[0, 101]]])})
+    assert rows_set(one.ask("tc", (2, None))) == \
+        rows_set(fresh.ask("tc", (2, None)))
+
+
+def _one_entry_budget(svc) -> int:
+    from repro.service.incremental import entry_bytes
+    return max(entry_bytes(e) for _, e in svc.cache.items()
+               if e.kind == "dense")
