@@ -1,10 +1,36 @@
-"""Shared benchmark utilities: timing, CSV emission."""
+"""Shared benchmark utilities: timing, load generation, CSV emission."""
 from __future__ import annotations
 
 import time
-from typing import Callable
+from typing import Callable, Iterable
 
 import jax
+import numpy as np
+
+
+def poisson_arrivals(rate_qps: float, n: int, seed: int) -> np.ndarray:
+    """Arrival offsets (seconds from t0) of an open-loop Poisson stream.
+
+    Open-loop means the schedule is fixed up front — the generator submits at
+    these instants regardless of how the system under test is keeping up, so
+    queueing delay shows up in the measured latencies instead of silently
+    throttling the offered rate (the closed-loop fallacy).  Seeded explicitly:
+    sweeps are reproducible and never keyed off the wall clock.
+    """
+    if rate_qps <= 0:
+        raise ValueError(f"offered rate must be positive, got {rate_qps}")
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate_qps, size=n))
+
+
+def latency_percentiles(samples: Iterable[float | None],
+                        pcts: tuple = (50, 95, 99)) -> dict:
+    """``{"p50": ..., "p95": ..., "p99": ...}`` over the non-None samples
+    (shed queries record ``None``); all-None yields None percentiles."""
+    xs = np.asarray([s for s in samples if s is not None], float)
+    if xs.size == 0:
+        return {f"p{p}": None for p in pcts}
+    return {f"p{p}": float(np.percentile(xs, p)) for p in pcts}
 
 
 def time_call(fn: Callable, *args, repeats: int = 3, warmup: int = 1, **kw) -> float:

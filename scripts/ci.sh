@@ -17,6 +17,7 @@ MODULES = [
     "repro.core.semiring", "repro.core.distributed", "repro.core.sparse",
     "repro.service", "repro.service.session", "repro.service.batch",
     "repro.service.incremental", "repro.service.cache", "repro.service.serve",
+    "repro.service.admission",
     "repro.kernels", "repro.data.graphs",
 ]
 for m in MODULES:
@@ -45,3 +46,6 @@ python benchmarks/bench_serve.py --smoke
 
 echo "== sparse serving smoke bench (CSR >= dense qps + warm-shape trace assert) =="
 python benchmarks/bench_serve.py --smoke --sparse
+
+echo "== async admission smoke bench (>= 1.5x sync qps + warm-flush trace assert) =="
+python benchmarks/bench_serve.py --smoke --async

@@ -218,6 +218,21 @@ def build_csr(edges: np.ndarray, n_alloc: int, kind: str = "bool",
         n=n, n_alloc=n_alloc, kind=kind, deg_cap=ell.shape[1])
 
 
+def tail_will_rebuild(csr: CSRMatrix, n_new: int,
+                      rebuild_frac: float = 0.25) -> bool:
+    """Would appending ``n_new`` arcs fold the COO tail into the spine?
+
+    The one rebuild predicate shared by :func:`csr_append` and the serving
+    layer (which re-runs the density heuristic at fold time — a tail that
+    densified the graph may flip the carrier back to dense).  The absolute
+    floor (8) only shields tiny spines from thrashing — the threshold must
+    NOT track ``tail_capacity``, which re-quantizes upward on every append
+    and would ratchet past ``rebuild_frac`` forever.
+    """
+    total_tail = int(csr.tail_nnz) + n_new
+    return total_tail > max(rebuild_frac * max(int(csr.nnz), 1), 8)
+
+
 def csr_append(csr: CSRMatrix, rows: np.ndarray,
                rebuild_frac: float = 0.25) -> CSRMatrix:
     """Monotone append: new arcs land in the COO tail; the CSR spine only
@@ -232,11 +247,7 @@ def csr_append(csr: CSRMatrix, rows: np.ndarray,
         raise ValueError("appended arcs outgrow n_alloc; rebuild the CSR")
     t = int(csr.tail_nnz)
     total_tail = t + len(src)
-    spine = int(csr.nnz)
-    # the absolute floor (8) only shields tiny spines from thrashing — the
-    # threshold must NOT track tail_capacity, which re-quantizes upward on
-    # every append and would ratchet past rebuild_frac forever
-    if total_tail > max(rebuild_frac * max(spine, 1), 8):
+    if tail_will_rebuild(csr, len(src), rebuild_frac):
         merged = np.concatenate([csr.edges_numpy(),
                                  np.asarray(rows, np.int64).reshape(len(src), -1)])
         return build_csr(merged, csr.n_alloc, csr.kind)

@@ -4,10 +4,15 @@
 query streams with memoized plans, micro-batched dense fixpoints
 (``batch.py``), an LRU result cache (``cache.py``), and incremental monotone
 EDB appends that resume — not recompute — cached fixpoints
-(``incremental.py``).  ``python -m repro.service.serve`` is the CLI
-front-end; ``benchmarks/bench_serve.py`` measures queries/sec.
+(``incremental.py``).  ``AsyncDatalogService`` (``admission.py``) puts a
+continuous-batching admission front-end over it: callers submit single
+queries and get futures while a dispatcher coalesces arrivals into batched
+fixpoints with device/host overlap.  ``python -m repro.service.serve`` is
+the CLI front-end; ``benchmarks/bench_serve.py`` measures queries/sec.
 """
+from .admission import AdmissionStats, AsyncDatalogService, QueueFullError
 from .cache import CacheEntry, LRUCache
 from .session import DatalogService, ServiceStats
 
-__all__ = ["CacheEntry", "DatalogService", "LRUCache", "ServiceStats"]
+__all__ = ["AdmissionStats", "AsyncDatalogService", "CacheEntry",
+           "DatalogService", "LRUCache", "QueueFullError", "ServiceStats"]

@@ -69,8 +69,19 @@ def run_frontier_batch(
     b = len(srcs)
     bp = pad_batch_size(b, pads)
     if init is None:
-        init = matrix[jnp.asarray(srcs)]
-    if bp > b:
+        # build the seed at the PADDED size: eager gather/where executables
+        # are cache-keyed by operand shape, so gathering the raw B rows and
+        # concatenating fill would pay a per-B mini-compile for every fresh
+        # batch size — and the admission front-end's flush sizes are
+        # arrival-dependent.  Duplicate-gather then ⊕-zero the pad rows.
+        idx = np.concatenate([np.asarray(srcs, np.int64),
+                              np.full(bp - b, srcs[0], np.int64)])
+        init = matrix[jnp.asarray(idx)]
+        if bp > b:
+            keep = jnp.arange(bp) < jnp.int32(b)
+            init = jnp.where(keep[:, None], init,
+                             jnp.asarray(sr.zero, matrix.dtype))
+    elif bp > b:  # caller-built seed (append-resume): B = cache occupancy
         fill = jnp.full((bp - b, matrix.shape[1]), sr.zero, matrix.dtype)
         init = jnp.concatenate([init, fill])
     if mesh is not None:
@@ -111,8 +122,16 @@ def run_frontier_batch_csr(
     bp = pad_batch_size(b, pads)
     sr = csr.semiring
     if init is None:
-        init = _sparse.rows_from_sources(csr, srcs)
-    if bp > b:
+        # padded-size seed for shape-stable eager dispatch (see the dense
+        # twin above): duplicate-gather to bp rows, ⊕-zero the pad rows
+        idx = np.concatenate([np.asarray(srcs, np.int64),
+                              np.full(bp - b, srcs[0], np.int64)])
+        init = _sparse.rows_from_sources(csr, idx)
+        if bp > b:
+            keep = jnp.arange(bp) < jnp.int32(b)
+            init = jnp.where(keep[:, None], init,
+                             jnp.asarray(sr.zero, init.dtype))
+    elif bp > b:
         fill = jnp.full((bp - b, init.shape[1]), sr.zero, init.dtype)
         init = jnp.concatenate([init, fill])
     if mesh is not None:

@@ -87,6 +87,22 @@ class LRUCache:
         for maintenance passes (append-resume policy), not serving."""
         return self._entries.get(key)
 
+    def get_fresh(self, key: Hashable, epoch: int) -> CacheEntry | None:
+        """:meth:`get`, but only when the entry's epoch matches.
+
+        The admission front-end's submit-time short-circuit probes the cache
+        from caller threads; unlike the batch path (which *asserts* epoch
+        freshness under the fence) a mismatched entry here is simply a miss
+        — the query is admitted and recomputed at the current epoch."""
+        ent = self._entries.get(key)
+        if ent is None or ent.epoch != epoch:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.hits += 1
+        ent.hits += 1
+        return ent
+
     def put(self, key: Hashable, entry: CacheEntry) -> None:
         if self.capacity <= 0:
             return

@@ -18,7 +18,11 @@ interactive stream::
 
 Actions execute in command-line order; ``--query`` answers print one row per
 line.  ``--batch`` coalesces consecutive ``--query`` flags into one
-micro-batched ``ask_batch`` call.
+micro-batched ``ask_batch`` call.  ``--async`` routes everything through the
+continuous-batching admission front-end instead (``admission.py``): queries
+are submitted as futures and coalesced by the dispatcher's arrival window
+(``--max-wait-ms`` / ``--max-batch`` / ``--queue-depth``), appends are
+epoch-fenced, and ``--stats`` adds the front-end's queue/flush counters.
 """
 from __future__ import annotations
 
@@ -128,6 +132,17 @@ def main(argv: list[str] | None = None) -> int:
     ap.set_defaults(actions=[])  # --query/--append interleave in CLI order
     ap.add_argument("--batch", action="store_true",
                     help="coalesce consecutive --query flags into ask_batch")
+    ap.add_argument("--async", dest="use_async", action="store_true",
+                    help="serve through the continuous-batching admission "
+                         "front-end (futures + windowed coalescing)")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="async coalescing window: flush when the oldest "
+                         "waiting query has aged this much")
+    ap.add_argument("--max-batch", type=int, default=64,
+                    help="async flush size cap")
+    ap.add_argument("--queue-depth", type=int, default=1024,
+                    help="async admission bound; beyond it submits are shed "
+                         "with QueueFullError")
     ap.add_argument("--cache", type=int, default=1024,
                     help="result-cache capacity (0 disables)")
     ap.add_argument("--sparse", choices=["auto", "csr", "dense"],
@@ -157,33 +172,52 @@ def main(argv: list[str] | None = None) -> int:
                          default_cap=args.default_cap,
                          sparse={"auto": None, "csr": True,
                                  "dense": False}[args.sparse])
+    front = None
+    if args.use_async:
+        from .admission import AsyncDatalogService
+        front = AsyncDatalogService(svc, max_wait_ms=args.max_wait_ms,
+                                    max_batch=args.max_batch,
+                                    queue_depth=args.queue_depth)
+    serve = front if front is not None else svc
 
-    pending: list[str] = []
+    pending: list = []  # sync --batch: query strings; async: (query, future)
 
     def flush():
         if not pending:
             return
-        for query, res in zip(pending, svc.ask_batch(list(pending))):
-            _print_answer(query, res)
+        if front is not None:
+            for query, fut in pending:
+                _print_answer(query, fut.result())
+        else:
+            for query, res in zip(pending, svc.ask_batch(list(pending))):
+                _print_answer(query, res)
         pending.clear()
 
     for kind, spec in args.actions:
         if kind == "query":
-            if args.batch:
+            if front is not None:
+                # submit now, gather at the next barrier — consecutive
+                # queries land in one dispatcher window and coalesce
+                pending.append((spec, front.submit(spec)))
+            elif args.batch:
                 pending.append(spec)
             else:
                 _print_answer(spec, svc.ask(spec))
         else:
             flush()
             rel, rows = _parse_append(spec)
-            svc.append(rel, rows)
-            print(f"appended {len(rows)} rows to {rel} (epoch {svc.epoch})")
+            serve.append(rel, rows)
+            print(f"appended {len(rows)} rows to {rel} (epoch {serve.epoch})")
     flush()
 
     if args.repl:
-        _repl(svc)
+        _repl(serve)
+    if front is not None:
+        front.drain()
     if args.stats:
-        print(json.dumps(svc.explain(), indent=2))
+        print(json.dumps(serve.explain(), indent=2))
+    if front is not None:
+        front.close()
     return 0
 
 

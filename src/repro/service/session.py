@@ -28,6 +28,7 @@ that across the stream:
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import OrderedDict
 
 import jax.numpy as jnp
@@ -70,6 +71,24 @@ class ServiceStats:
     dropped_cold: int = 0  # cold entries evicted instead of resumed
 
 
+@dataclasses.dataclass
+class _PendingBatch:
+    """In-flight state between :meth:`DatalogService.launch_batch` and
+    :meth:`DatalogService.finalize_batch` — the double-buffering unit of the
+    admission front-end.  Holds the device results (lazy jax arrays: the
+    fixpoint may still be running when launch returns) plus everything the
+    host-side finalize needs without re-touching shared engine state."""
+
+    epoch: int  # service epoch at launch; finalize asserts it is unchanged
+    qlits: list
+    out: list  # answer slots; EDB selections fill at launch
+    hits: list = dataclasses.field(default_factory=list)  # (slot, CacheEntry)
+    #: [(pred, _DenseRelation, items, uniq_srcs, in_range, DenseResult|None)]
+    dense: list = dataclasses.field(default_factory=list)
+    #: [(pred, items, uniq, (template, launched)|None, results|None)]
+    tuples: list = dataclasses.field(default_factory=list)
+
+
 def _freeze(res):
     """Mark a cached answer's arrays read-only: cache hits (and duplicate
     queries in one batch) hand out the SAME arrays, so a caller mutating an
@@ -104,6 +123,8 @@ class _DenseRelation:
         self.n_alloc = 0
         self.matrix = None
         self.csr = None
+        self.flips = 0  # representation changes across rebuilds (live
+        self.last_flip: str | None = None  # density heuristic, ROADMAP 6c)
         self._rebuild(svc)
 
     @property
@@ -111,6 +132,8 @@ class _DenseRelation:
         return self.csr is not None
 
     def _rebuild(self, svc: "DatalogService"):
+        prev = None if (self.matrix is None and self.csr is None) else \
+            ("csr" if self.is_csr else "dense")
         arity = 2 if self.low.kind == "bool" else 3
         edges = svc.db.get(self.low.edb, np.zeros((0, arity), np.int64))
         n = int(edges[:, :2].max()) + 1 if len(edges) else 0
@@ -138,6 +161,10 @@ class _DenseRelation:
                 np.minimum.at(w, (edges[:, 0], edges[:, 1]),
                               edges[:, 2].astype(np.float32))
             self.matrix = jnp.asarray(w)
+        now = "csr" if use_csr else "dense"
+        if prev is not None and prev != now:
+            self.flips += 1
+            self.last_flip = f"{prev}->{now}"
 
     def seed_rows(self, srcs) -> jnp.ndarray:
         """The (B, n_alloc) frontier rows ``A[srcs]`` in the carrier."""
@@ -166,8 +193,17 @@ class _DenseRelation:
         self.n = new_n
         if len(rows):
             if self.is_csr:
-                self.csr = _sparse.csr_append(self.csr, rows,
-                                              svc.csr_rebuild_frac)
+                if _sparse.tail_will_rebuild(self.csr, len(rows),
+                                             svc.csr_rebuild_frac):
+                    # the tail outgrew the spine: fold via a FULL rebuild —
+                    # which re-runs the density heuristic, so a tail that
+                    # densified the graph past the threshold flips the
+                    # carrier back to the dense matrix (live flip-back)
+                    # instead of unconditionally re-packing CSR
+                    self._rebuild(svc)
+                else:
+                    self.csr = _sparse.csr_append(self.csr, rows,
+                                                  svc.csr_rebuild_frac)
             elif self.low.kind == "bool":
                 self.matrix = self.matrix.at[rows[:, 0], rows[:, 1]].set(True)
             else:
@@ -299,6 +335,14 @@ class _QueryTemplate:
         per-query answers in order.  Raises (PlanError/CapacityError/
         ValueError) when the batch cannot run batched — callers fall back to
         sequential ``run``."""
+        return self.finalize_launched(svc, self.launch_batch(svc, qlits))
+
+    def launch_batch(self, svc: "DatalogService", qlits: list[Literal]) -> dict:
+        """Device half of :meth:`run_batch`: seed + run the qid-tagged
+        fixpoint and *capture* the materialized model.  The capture matters:
+        the admission front-end launches the next flush on this template
+        while the previous flush's host-side split is still running, and a
+        second ``eng.run()`` would overwrite the engine state."""
         eng = self._ensure_qid_engine(svc)
         seeds = np.asarray(
             [[qid] + [int(q.args[i].value) for i in self.bound_positions]
@@ -306,19 +350,33 @@ class _QueryTemplate:
         eng.db[self.seed_rel] = seeds
         eng.invalidate(self.seed_rel)
         eng.run()
-        out = self._split(eng, qlits)
+        return dict(seeds=seeds, qlits=list(qlits),
+                    model=eng.materialized[self.result_pred],
+                    info=eng._pred_info[self.result_pred],
+                    state=dict(eng.materialized))
+
+    def finalize_launched(self, svc: "DatalogService", launched: dict) -> list:
+        """Host half of :meth:`run_batch`: per-qid attribution over the
+        captured model + snapshot store — pure host work over the launch's
+        own arrays, safe to overlap with the next flush's device fixpoint."""
+        rows, vals = launched["model"]
+        qlits = launched["qlits"]
+        out = split_qid_answers(self.result_pred, rows, vals,
+                                launched["info"], qlits)
         if self.resumable and svc.snapshot_lru > 0:
             self._store_snap(svc, tuple(svc._cache_key(q) for q in qlits),
-                             _inc.TupleSnapshot(seeds=seeds, qlits=list(qlits),
-                                                state=dict(eng.materialized)))
+                             _inc.TupleSnapshot(seeds=launched["seeds"],
+                                                qlits=qlits,
+                                                state=launched["state"]))
         return out
 
     def _store_snap(self, svc: "DatalogService", key: tuple,
                     snap: _inc.TupleSnapshot) -> None:
-        self._snaps[key] = snap
-        self._snaps.move_to_end(key)
-        while len(self._snaps) > svc.snapshot_lru:
-            self._snaps.popitem(last=False)
+        with svc.lock:  # finalize may run off the service lock (admission)
+            self._snaps[key] = snap
+            self._snaps.move_to_end(key)
+            while len(self._snaps) > svc.snapshot_lru:
+                self._snaps.popitem(last=False)
 
     def _split(self, eng: Engine, qlits: list[Literal], qids=None) -> list:
         """Per-seed attribution (``engine.split_qid_answers``): the qid
@@ -458,6 +516,11 @@ class DatalogService:
         self._templates: dict[tuple[str, str], _QueryTemplate] = {}
         self._dense: dict[str, _DenseRelation] = {}
         self._lowerings: dict[str, FrontierLowering | None] = {}
+        #: guards all shared serving state (cache, stats, templates, carrier
+        #: relations, epoch).  Re-entrant and uncontended in single-threaded
+        #: use; the admission front-end (``admission.py``) launches flushes,
+        #: finalizes them and probes the cache from different threads.
+        self.lock = threading.RLock()
 
     # -- queries -------------------------------------------------------------
 
@@ -475,55 +538,103 @@ class DatalogService:
         attribution splits the union back per query); everything else runs
         through the memoized tuple templates one by one.  Every answer lands
         in the result cache individually, so later singleton queries hit.
+
+        Internally two phases: :meth:`launch_batch` dispatches the device
+        fixpoints, :meth:`finalize_batch` does the host-side splitting,
+        formatting and cache fill — the admission front-end
+        (``admission.py``) runs them on different threads so batch *k*'s
+        host work overlaps batch *k+1*'s device fixpoint.
         """
-        qlits = [self._as_literal(s) for s in queries]
-        out: list = [None] * len(qlits)
-        dense: dict[str, list[tuple[int, int, Literal]]] = {}
-        singles: list[tuple[int, Literal]] = []
-        for i, q in enumerate(qlits):
-            key = self._cache_key(q)
-            ent = self.cache.get(key)
-            if ent is not None:
-                assert ent.epoch == self.epoch, "stale cache entry survived append"
-                out[i] = self._entry_result(ent)
-                continue
-            if q.pred in self.db:  # EDB query: a pure selection
-                out[i] = self._ask_edb(q)
-                continue
-            src = self._dense_source(q)
-            if src is not None:
-                dense.setdefault(q.pred, []).append((i, src, q))
-            else:
-                singles.append((i, q))
-        for pred, items in dense.items():
-            self._run_dense_batch(pred, items, out)
-        # group tuple queries by (pred, adornment) shape; same-shape groups
-        # of >= 2 distinct queries share one qid-tagged fixpoint.  Mixed
-        # shapes NEVER coalesce (their demands don't share a seed schema).
-        shapes = _batch.coalesce_by_shape(
-            singles, lambda q: (q.pred, self._adorn(q)))
-        computed: dict = {}  # dedupe identical tuple queries within the batch
-        for (pred, adn), items in shapes.items():
-            uniq: list[tuple[object, Literal]] = []
-            seen: set = set()  # a cache key pins its shape, so per-group dedup
-            for _, q in items:
+        with self.lock:
+            return self.finalize_batch(self.launch_batch(queries))
+
+    def launch_batch(self, queries: list) -> "_PendingBatch":
+        """Phase 1 of :meth:`ask_batch`: classify queries (cache hit / EDB
+        selection / dense-coalescible / tuple shape) and dispatch every
+        device fixpoint.  Returns the in-flight state for
+        :meth:`finalize_batch`; must run under :attr:`lock`."""
+        with self.lock:
+            qlits = [self._as_literal(s) for s in queries]
+            pending = _PendingBatch(epoch=self.epoch, qlits=qlits,
+                                    out=[None] * len(qlits))
+            dense: dict[str, list[tuple[int, int, Literal]]] = {}
+            singles: list[tuple[int, Literal]] = []
+            for i, q in enumerate(qlits):
                 key = self._cache_key(q)
-                if key not in seen:
-                    seen.add(key)
-                    uniq.append((key, q))
-            results = None
-            if len(uniq) > 1 and BOUND in adn:
-                results = self._run_tuple_batch(pred, adn, uniq)
-            if results is None:  # singleton / unbatchable: sequential path
-                results = {}
-                for key, q in uniq:
-                    results[key] = _freeze(self._ask_tuple(q))
-            for key, res in results.items():
-                computed[key] = res
-                self.cache.put(key, CacheEntry("tuple", pred, res, self.epoch))
-            for i, q in items:
-                out[i] = computed[self._cache_key(q)]
-        return out
+                ent = self.cache.get(key)
+                if ent is not None:
+                    assert ent.epoch == self.epoch, \
+                        "stale cache entry survived append"
+                    pending.hits.append((i, ent))
+                    continue
+                if q.pred in self.db:  # EDB query: a pure selection
+                    pending.out[i] = self._ask_edb(q)
+                    continue
+                src = self._dense_source(q)
+                if src is not None:
+                    dense.setdefault(q.pred, []).append((i, src, q))
+                else:
+                    singles.append((i, q))
+            for pred, items in dense.items():
+                pending.dense.append(self._launch_dense_batch(pred, items))
+            # group tuple queries by (pred, adornment) shape; same-shape
+            # groups of >= 2 distinct queries share one qid-tagged fixpoint.
+            # Mixed shapes NEVER coalesce (no shared seed schema).
+            shapes = _batch.coalesce_by_shape(
+                singles, lambda q: (q.pred, self._adorn(q)))
+            for (pred, adn), items in shapes.items():
+                pending.tuples.append(
+                    self._launch_tuple_group(pred, adn, items))
+            return pending
+
+    def finalize_batch(self, pending: "_PendingBatch") -> list:
+        """Phase 2 of :meth:`ask_batch`: block on the launched device
+        tables, split/format per query (host work, runs *outside* the
+        service lock), then fill the result cache and the answer slots
+        under the lock.  The epoch assert is the fencing invariant: an
+        append must never land between a batch's launch and its cache fill
+        (``incremental.EpochFence`` enforces this for the async front-end).
+        """
+        dense_done = []
+        for pred, ds, items, uniq, in_range, res in pending.dense:
+            # ONE host transfer per group (the device sync of the whole
+            # batched fixpoint); per-row jax indexing would compile a tiny
+            # gather per (shape, row) pair on the serving hot path
+            table = np.asarray(res.table) if in_range else None
+            formatted = {s: (self._format(ds, s, table[j]), table[j])
+                         for j, s in enumerate(in_range)}
+            dense_done.append((pred, ds, items, uniq, formatted))
+        tuple_done = []
+        for pred, items, uniq, launched, results in pending.tuples:
+            if results is None:  # batched: split the captured model now
+                tpl, run = launched
+                answers = tpl.finalize_launched(self, run)
+                results = {key: _freeze(res)
+                           for (key, _), res in zip(uniq, answers)}
+            tuple_done.append((pred, items, results))
+        with self.lock:
+            assert pending.epoch == self.epoch, \
+                "append overtook an in-flight batch (epoch fence violated)"
+            out = pending.out
+            for i, ent in pending.hits:
+                out[i] = self._entry_result(ent)
+            for pred, ds, items, uniq, formatted in dense_done:
+                final: dict[int, object] = {}
+                for s, (fmt, raw) in formatted.items():
+                    self._cache_dense(pred, s, fmt, raw)
+                    final[s] = fmt
+                for s in uniq:
+                    if s not in final:  # beyond the domain: nothing reachable
+                        final[s] = self._empty_dense(ds, s)
+                for i, src, _ in items:
+                    out[i] = final[src]
+            for pred, items, results in tuple_done:
+                for key, res in results.items():
+                    self.cache.put(key, CacheEntry("tuple", pred, res,
+                                                   self.epoch))
+                for i, q in items:
+                    out[i] = results[self._cache_key(q)]
+            return out
 
     # -- appends -------------------------------------------------------------
 
@@ -535,27 +646,28 @@ class DatalogService:
         (``incremental.py``) so hot entries stay warm; everything else (and,
         under ``resume_min_hits``, the cold tail) is invalidated.
         """
-        if rel not in self.db:
-            raise ValueError(
-                f"{rel!r} is not an EDB relation of this service "
-                f"(known: {sorted(self.db)}); appends are EDB-only")
-        rows = _inc.validate_append(rows, self.db[rel].shape[1], self.bits)
-        self.db[rel] = np.concatenate([self.db[rel], rows], axis=0)
-        self.epoch += 1
-        self.stats.appends += 1
-        self._base.invalidate(rel)
-        for tpl in self._templates.values():
-            tpl.on_append(self, rel)
-        refreshed = self._resume_tuple_snapshots(rel)
-        self.cache.drop_where(
-            lambda k, e: e.kind == "tuple" and k not in refreshed)
-        for k, e in self.cache.items():
-            if e.kind == "dense" and self._lowering(e.pred).edb != rel:
-                e.epoch = self.epoch  # untouched base relation: still valid
-        for pred, ds in self._dense.items():
-            if ds.low.edb == rel:
-                self._refresh_dense(pred, ds, rows)
-        return self
+        with self.lock:
+            if rel not in self.db:
+                raise ValueError(
+                    f"{rel!r} is not an EDB relation of this service "
+                    f"(known: {sorted(self.db)}); appends are EDB-only")
+            rows = _inc.validate_append(rows, self.db[rel].shape[1], self.bits)
+            self.db[rel] = np.concatenate([self.db[rel], rows], axis=0)
+            self.epoch += 1
+            self.stats.appends += 1
+            self._base.invalidate(rel)
+            for tpl in self._templates.values():
+                tpl.on_append(self, rel)
+            refreshed = self._resume_tuple_snapshots(rel)
+            self.cache.drop_where(
+                lambda k, e: e.kind == "tuple" and k not in refreshed)
+            for k, e in self.cache.items():
+                if e.kind == "dense" and self._lowering(e.pred).edb != rel:
+                    e.epoch = self.epoch  # untouched base relation: valid
+            for pred, ds in self._dense.items():
+                if ds.low.edb == rel:
+                    self._refresh_dense(pred, ds, rows)
+            return self
 
     def _resume_tuple_snapshots(self, rel: str) -> dict:
         """Resume batched tuple templates from their fixpoint snapshots and
@@ -618,6 +730,8 @@ class DatalogService:
             "dense": {p: {"n": ds.n, "n_alloc": ds.n_alloc,
                           "semiring": ds.sr.name,
                           "repr": "csr" if ds.is_csr else "dense",
+                          **({"flips": ds.flips, "last_flip": ds.last_flip}
+                             if ds.flips else {}),
                           **({"nnz": int(ds.csr.nnz) + int(ds.csr.tail_nnz),
                               "density": ds.csr.density()}
                              if ds.is_csr else {})}
@@ -708,27 +822,23 @@ class DatalogService:
     def _empty_dense(self, ds: _DenseRelation, src: int):
         return self._format(ds, src, jnp.full((0,), ds.sr.zero))
 
-    def _run_dense_batch(self, pred: str, items, out):
+    def _launch_dense_batch(self, pred: str, items):
+        """Dispatch ONE batched closure fixpoint for a dense group; the
+        returned :class:`DenseResult` table is lazy — formatting (and the
+        implied device sync) happens in :meth:`finalize_batch`."""
         ds = self._dense_state(pred)
         uniq: list[int] = []
         for _, src, _ in items:
             if src not in uniq:
                 uniq.append(src)
         in_range = [s for s in uniq if s < ds.n_alloc]
-        results: dict[int, object] = {}
+        res = None
         if in_range:
             res = ds.run_batch(self, in_range)
             self.stats.dense_fixpoints += 1
             self.stats.csr_fixpoints += 1 if ds.is_csr else 0
             self.stats.batched_queries += len(in_range)
-            for j, s in enumerate(in_range):
-                results[s] = self._format(ds, s, res.table[j])
-                self._cache_dense(pred, s, results[s], res.table[j])
-        for s in uniq:
-            if s not in results:  # source beyond the domain: nothing reachable
-                results[s] = self._empty_dense(ds, s)
-        for i, src, _ in items:
-            out[i] = results[src]
+        return (pred, ds, items, uniq, in_range, res)
 
     def _cache_dense(self, pred: str, src: int, formatted, raw):
         low = self._lowering(pred)
@@ -782,22 +892,44 @@ class DatalogService:
             return tpl, True
         return tpl, False
 
-    def _run_tuple_batch(self, pred: str, adn: str, uniq: list) -> dict | None:
+    def _launch_tuple_group(self, pred: str, adn: str, items):
+        """One (pred, adornment) shape group: launch the qid-tagged batched
+        fixpoint when the shape allows it, otherwise run the sequential
+        templates to completion (their answers are already host arrays)."""
+        uniq: list[tuple[object, Literal]] = []
+        seen: set = set()  # a cache key pins its shape, so per-group dedup
+        for _, q in items:
+            key = self._cache_key(q)
+            if key not in seen:
+                seen.add(key)
+                uniq.append((key, q))
+        launched = None
+        results = None
+        if len(uniq) > 1 and BOUND in adn:
+            launched = self._launch_tuple_batch(pred, adn, uniq)
+        if launched is None:  # singleton / unbatchable: sequential path
+            results = {}
+            for key, q in uniq:
+                results[key] = _freeze(self._ask_tuple(q))
+        return (pred, items, uniq, launched, results)
+
+    def _launch_tuple_batch(self, pred: str, adn: str, uniq: list):
         """B same-shape tuple queries as ONE qid-tagged fixpoint; returns
-        {cache_key: frozen answer} or None to fall back to sequential runs
-        (shape not batchable, or the union of demands overflowed a table)."""
+        (template, launched-state) for the finalize split, or None to fall
+        back to sequential runs (shape not batchable, or the union of
+        demands overflowed a table)."""
         tpl, fresh = self._template(pred, adn, uniq[0][1])
         if not tpl.batchable:
             return None
         try:
-            answers = tpl.run_batch(self, [q for _, q in uniq])
+            run = tpl.launch_batch(self, [q for _, q in uniq])
         except (PlanError, CapacityError, ValueError):
             return None
         self.stats.plan_hits += len(uniq) - (1 if fresh else 0)
         self.stats.tuple_runs += 1
         self.stats.tuple_fixpoints += 1
         self.stats.tuple_batched_queries += len(uniq)
-        return {key: _freeze(res) for (key, _), res in zip(uniq, answers)}
+        return (tpl, run)
 
     def _ask_tuple(self, q: Literal):
         adn = self._adorn(q)

@@ -3,7 +3,7 @@
 Random programs (TC / nonlinear TC / same-generation / mutual recursion /
 min-agg shortest paths, with random constants and repeated variables in the
 goals) over random EDBs, checked against ``_reference.ref_model`` — a naive
-fixpoint over Python sets — on SIX evaluation paths:
+fixpoint over Python sets — on EIGHT evaluation paths:
 
   1. naive full-model ``Engine.run()`` + goal filter
   2. ``Engine.ask``           (magic-sets restricted evaluation)
@@ -15,6 +15,11 @@ fixpoint over Python sets — on SIX evaluation paths:
                                  engine behind the same batching interface,
                                  batched + append-resume; answers must be
                                  bit-identical to the dense service's)
+  8. async admission front-end   (``AsyncDatalogService``: the same queries
+                                 submitted concurrently; the dispatcher's
+                                 flush composition is timing-dependent, so
+                                 answers are compared as sets — the invariant
+                                 is that coalescing NEVER changes an answer)
 
 Case count defaults to a CI-smoke size; ``DIFF_CASES=200 pytest
 tests/test_differential.py`` runs the acceptance-sized sweep (the generator
@@ -25,6 +30,7 @@ cache; only EDB rows, query constants and seeds vary.
 """
 import os
 import random
+import threading
 
 import numpy as np
 import pytest
@@ -33,7 +39,7 @@ from _reference import ref_answer, ref_model
 
 from repro.core.engine import Engine
 from repro.core.ir import Const, Literal, Var
-from repro.service import DatalogService
+from repro.service import AsyncDatalogService, DatalogService
 
 DIFF_CASES = int(os.environ.get("DIFF_CASES", "16"))
 DIFF_SEED = int(os.environ.get("DIFF_SEED", "0"))
@@ -159,6 +165,30 @@ def test_differential(case):
                         got if isinstance(got, tuple) else (got,)):
             assert np.array_equal(a, b), \
                 f"case={case} query={queries[i]!r}: dense/CSR not bit-identical"
+
+    # 8. async admission front-end: the same queries submitted concurrently
+    # from two threads; arrival timing makes the dispatcher's flush
+    # composition nondeterministic, so answers are compared as sets — the
+    # invariant under test is that coalescing never changes an answer
+    front = AsyncDatalogService(DatalogService(text, db=db, **CAPS),
+                                max_wait_ms=1.0, max_batch=4)
+    futs: list = [None] * len(queries)
+
+    def _submit(lo, hi):
+        for i in range(lo, hi):
+            futs[i] = front.submit(queries[i])
+
+    half = len(queries) // 2
+    workers = [threading.Thread(target=_submit, args=(0, half)),
+               threading.Thread(target=_submit, args=(half, len(queries)))]
+    for w in workers:
+        w.start()
+    for w in workers:
+        w.join()
+    for i, f in enumerate(futs):
+        check("service-async", case, queries[i], f.result(timeout=120),
+              want[i])
+    front.close()
 
     # 6. append-resume: serve a prefix EDB, append the tail, re-serve
     rel = SHAPES[shape][2][0]

@@ -238,6 +238,40 @@ def test_service_csr_domain_growth_rebuilds():
     assert np.array_equal(svc.ask("tc", (0, None)), want.ask("tc", (0, None)))
 
 
+def test_service_append_flips_csr_back_to_dense():
+    """Live density flip-back: a CSR-routed relation whose appends densify
+    the graph re-runs the density heuristic at the tail-fold rebuild and
+    may return a dense carrier — the representation is a live decision,
+    not a load-time one.  The flip is recorded and surfaced in explain()."""
+    start = rand_edges(64, 0.01, seed=13)  # below the 1/64 cut -> CSR
+    svc = DatalogService(TC, db={"arc": start})
+    qs = [("tc", (s, None)) for s in [0, 7, 33]]
+    svc.ask_batch(qs)
+    ds = svc._dense_state("tc")
+    assert ds.is_csr and ds.flips == 0
+    densify = rand_edges(64, 0.3, seed=14)  # tail ≫ rebuild_frac · nnz
+    svc.append("arc", densify)
+    assert not ds.is_csr, "rebuild should have flipped the carrier dense"
+    assert ds.flips == 1 and ds.last_flip == "csr->dense"
+    rep = svc.explain()["dense"]["tc"]
+    assert rep["repr"] == "dense" and rep["flips"] == 1
+    assert rep["last_flip"] == "csr->dense"
+    # answers after the flip match a from-scratch dense service
+    fresh = DatalogService(TC, db={"arc": np.concatenate([start, densify])},
+                           sparse=False)
+    for got, want in zip(svc.ask_batch(qs), fresh.ask_batch(qs)):
+        assert np.array_equal(got, want)
+    # a small tail append on a still-sparse relation must NOT flip (the
+    # fold-threshold path keeps the COO tail and never re-runs the heuristic)
+    svc2 = DatalogService(TC, db={"arc": rand_edges(256, 0.004, seed=15)})
+    svc2.ask("tc", (0, None))
+    ds2 = svc2._dense_state("tc")
+    assert ds2.is_csr
+    svc2.append("arc", np.array([[0, 255]], np.int64))
+    assert ds2.is_csr and ds2.flips == 0
+    assert "flips" not in svc2.explain()["dense"]["tc"]
+
+
 def test_engine_ask_dense_sparse_knob():
     edges = rand_edges(96, 0.02, seed=12)
     eng = Engine(TC, db={"arc": edges})
