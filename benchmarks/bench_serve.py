@@ -29,6 +29,15 @@ Workload: single-source TC queries against a >= 10k-edge random digraph
     achieved qps, shed count, and p50/p95/p99 latency — the
     throughput–latency curve.
 
+  * ``obs``         — ``--obs``: observability cost + per-stage latency
+    breakdown.  Steady-state qps with the unified metrics registry
+    default-ON vs OFF (acceptance: ON >= 0.95x OFF), then an async run on
+    a traced+metered service reporting queue-wait / device / finalize
+    percentiles from the stage histograms and checking the exported Chrome
+    trace shows dispatcher-lane launches overlapping finalizer-lane
+    finalizes (the PR-6 double-buffering, now visible in a timeline).
+    ``--trace-out`` / ``--metrics-out`` export that run's artifacts.
+
 Acceptance (ISSUE 2): steady-state B=32 serving >= 5x sequential
 ``Engine.ask`` qps; append-resume beats recompute.
 Acceptance (ISSUE 4): steady-state B=16 tuple-batch >= 3x sequential
@@ -466,6 +475,125 @@ def bench_async(smoke: bool) -> dict:
     return rec
 
 
+def bench_obs(smoke: bool, trace_out: str | None = None,
+              metrics_out: str | None = None) -> dict:
+    """Observability cost + per-stage latency attribution.
+
+    Three measurements on the TC serving workload:
+
+    * **overhead** — steady-state batched qps with the unified metrics
+      registry default-ON vs ``metrics=False``, best-of-k each on the same
+      compile-warm shapes and source batch; acceptance is ON >= 0.95x OFF
+      (default-on metrics cost <= 5%).
+    * **stages** — an async run against a traced + metered service: the
+      stage histograms give the queue-wait / device / finalize latency
+      breakdown the flat qps number hides.
+    * **overlap** — the same run's trace must show a dispatcher-lane
+      ``launch_batch`` span overlapping a finalizer-lane ``finalize_batch``
+      span: the admission front-end's device/host double-buffering, visible
+      in the exported Chrome timeline.
+    """
+    if smoke:
+        n, p, b, n_async, repeats = 128, 0.05, 16, 64, 15
+    else:
+        n, p, b, n_async, repeats = 1024, 0.01, 32, 256, 5
+    edges = gnp_graph(n, p, seed=11)
+    rng = np.random.default_rng(47)
+    rec: dict = {"graph": f"G{n}-p{p}", "edges": int(len(edges)),
+                 "batch": b, "smoke": smoke}
+    print(f"obs: {rec['graph']}, {rec['edges']} edges, B={b}", flush=True)
+
+    # --- default-on metrics overhead vs metrics=False ------------------------
+    # interleaved best-of-k over BLOCKS of batches: a single steady batch is
+    # ms-scale, where timer jitter and background drift dwarf a few-percent
+    # metrics cost.  Each sample times `block` back-to-back cache-cleared
+    # batches, and the two sides alternate rounds so slow periods hit both.
+    block = 8 if smoke else 4
+    sources = rng.choice(n, size=2 * b, replace=False).tolist()
+    cold_q = [("tc", (s, None)) for s in sources[:b]]
+    steady_q = [("tc", (s, None)) for s in sources[b:2 * b]]
+    svcs = {"metrics_off": DatalogService(TC, db={"arc": edges},
+                                          metrics=False),
+            "metrics_on": DatalogService(TC, db={"arc": edges})}
+    t_best = {name: None for name in svcs}
+    for svc in svcs.values():
+        assert len(svc.ask_batch(cold_q)) == b  # compile-warm prelude
+
+    def run_block(svc):
+        for _ in range(block):
+            svc.cache.clear()
+            svc.ask_batch(steady_q)
+
+    for _ in range(repeats):
+        for name, svc in svcs.items():
+            _, t = _wall(lambda: run_block(svc))
+            t_best[name] = t if t_best[name] is None \
+                else min(t_best[name], t)
+    for name, t_block in t_best.items():
+        t_steady = t_block / block
+        rec[name] = {"steady_seconds": t_steady, "steady_qps": b / t_steady}
+        print(f"  {name:11s}: steady {b / t_steady:8.1f} qps", flush=True)
+    rec["metrics_on_over_off"] = (rec["metrics_on"]["steady_qps"]
+                                  / rec["metrics_off"]["steady_qps"])
+    print(f"  metrics on/off qps ratio: {rec['metrics_on_over_off']:.3f}",
+          flush=True)
+    assert rec["metrics_on_over_off"] >= 0.95, \
+        "acceptance: default-on metrics must cost <= 5% steady qps"
+
+    # --- traced + metered async run: stage breakdown + overlap ---------------
+    max_batch = 8
+    svc = DatalogService(TC, db={"arc": edges}, tracer=True)
+    front = AsyncDatalogService(svc, max_wait_ms=1.0, max_batch=max_batch,
+                                queue_depth=1024)
+    # compile-warm every pad shape a flush can hit, then trace a clean run
+    top = batch_mod.pad_batch_size(max_batch, svc.batch_pads)
+    for bb in [lv for lv in svc.batch_pads if lv <= top]:
+        svc.ask_batch([("tc", (int(s), None))
+                       for s in rng.choice(n, size=bb, replace=False)])
+    with svc.lock:
+        svc.cache.clear()
+    svc.tracer.clear()
+    burst = [("tc", (int(s), None)) for s in rng.integers(0, n, size=n_async)]
+    t0 = time.perf_counter()
+    futs = [front.submit(q) for q in burst]
+    front.drain(timeout=300.0)
+    elapsed = time.perf_counter() - t0
+    assert all(f.done() for f in futs)
+    rec["async_traced"] = {"queries": n_async, "max_batch": max_batch,
+                           "seconds": elapsed, "qps": n_async / elapsed}
+    m = svc.metrics
+    rec["stages"] = {
+        "queue_wait": m.histogram("datalog_queue_wait_seconds").percentiles(),
+        "device": m.histogram("datalog_device_seconds").percentiles(),
+        "finalize": m.histogram("datalog_finalize_seconds").percentiles(),
+    }
+    for stage, pcts in rec["stages"].items():
+        print(f"  {stage:10s}: " + "  ".join(
+            f"{k} {v * 1e3:7.3f} ms" for k, v in pcts.items()), flush=True)
+
+    launches = svc.tracer.spans("launch_batch")
+    finals = svc.tracer.spans("finalize_batch")
+    overlap = sum(1 for lb in launches for fb in finals
+                  if lb["tid"] != fb["tid"] and svc.tracer.overlaps(lb, fb))
+    rec["trace"] = {"events": len(svc.tracer.events()),
+                    "launches": len(launches), "finalizes": len(finals),
+                    "launch_finalize_overlaps": overlap}
+    print(f"  trace: {rec['trace']['events']} events, "
+          f"{len(launches)} launches, {overlap} cross-lane "
+          f"launch/finalize overlaps", flush=True)
+    if not smoke:  # a 256-query burst over >= 32 flushes must pipeline
+        assert overlap > 0, \
+            "async trace shows no launch/finalize double-buffering overlap"
+    if metrics_out:
+        m.export(metrics_out)
+        print(f"  metrics -> {metrics_out}", flush=True)
+    if trace_out:
+        svc.tracer.export_chrome(trace_out)
+        print(f"  trace -> {trace_out}", flush=True)
+    front.close()
+    return rec
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -476,11 +604,23 @@ def main():
     ap.add_argument("--async", dest="use_async", action="store_true",
                     help="run only the admission front-end Poisson rate "
                          "sweep and merge it into the existing JSON")
+    ap.add_argument("--obs", action="store_true",
+                    help="run only the observability overhead/stage-breakdown"
+                         " section and merge it into the existing JSON")
+    ap.add_argument("--trace-out", default=None, metavar="FILE.json",
+                    help="with --obs: export the traced async run as a "
+                         "Chrome trace_event timeline")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE",
+                    help="with --obs: export the traced run's metrics "
+                         "registry (.prom/.txt = Prometheus text, else JSON)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     out = Path(args.out) if args.out else Path(__file__).parent / "BENCH_serve.json"
     section = ("sparse", bench_sparse) if args.sparse else \
-        ("async", bench_async) if args.use_async else None
+        ("async", bench_async) if args.use_async else \
+        ("obs", lambda smoke: bench_obs(
+            smoke, trace_out=args.trace_out,
+            metrics_out=args.metrics_out)) if args.obs else None
     if section is not None:
         name, fn = section
         rec = fn(args.smoke)
@@ -496,9 +636,9 @@ def main():
     if args.smoke and args.out is None:
         print(json.dumps(rec, indent=2))
         return
-    if out.exists():  # keep already-recorded sparse/async sections
+    if out.exists():  # keep already-recorded sparse/async/obs sections
         prev = json.loads(out.read_text())
-        for name in ("sparse", "async"):
+        for name in ("sparse", "async", "obs"):
             if name in prev:
                 rec[name] = prev[name]
     out.write_text(json.dumps(rec, indent=2))

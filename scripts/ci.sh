@@ -18,6 +18,8 @@ MODULES = [
     "repro.service", "repro.service.session", "repro.service.batch",
     "repro.service.incremental", "repro.service.cache", "repro.service.serve",
     "repro.service.admission",
+    "repro.obs", "repro.obs.trace", "repro.obs.metrics",
+    "repro.obs.fixpoint_probe", "repro.obs.roofline_attr",
     "repro.kernels", "repro.data.graphs",
 ]
 for m in MODULES:
@@ -49,3 +51,31 @@ python benchmarks/bench_serve.py --smoke --sparse
 
 echo "== async admission smoke bench (>= 1.5x sync qps + warm-flush trace assert) =="
 python benchmarks/bench_serve.py --smoke --async
+
+echo "== observability smoke bench (metrics-on >= 0.95x metrics-off + exports parse) =="
+python benchmarks/bench_serve.py --smoke --obs \
+    --trace-out /tmp/trace.json --metrics-out /tmp/metrics.prom
+python - <<'EOF'
+import json
+
+doc = json.load(open("/tmp/trace.json"))
+evs = doc["traceEvents"]
+assert evs, "exported Chrome trace is empty"
+for e in evs:
+    assert e["ph"] in ("X", "i") and all(
+        k in e for k in ("name", "cat", "ts", "pid", "tid")), e
+    assert e["ph"] != "X" or "dur" in e, e
+
+text = open("/tmp/metrics.prom").read()
+assert text.strip(), "exported Prometheus text is empty"
+families = 0
+for line in text.splitlines():
+    if line.startswith("# TYPE "):
+        kind = line.split()[-1]
+        assert kind in ("counter", "gauge", "histogram"), line
+        families += 1
+    elif line and not line.startswith("#"):
+        float(line.rsplit(" ", 1)[1])  # every sample line parses
+assert families >= 5, f"only {families} metric families exported"
+print(f"trace: {len(evs)} events ok; metrics: {families} families ok")
+EOF

@@ -1,0 +1,165 @@
+"""Opt-in probed fixpoint twins: per-iteration frontier/Δ visibility.
+
+``fixpoint_dense_cached`` / ``fixpoint_csr_cached`` run the whole
+semi-naive loop inside one ``jax.lax.while_loop``, so per-iteration
+frontier sizes and delta-fact counts (semi-naive's own Δ) are invisible
+from the host. The probed twins here unroll the loop on the host: each
+iteration is one *separately jitted* step whose body replicates the
+unprobed step's ops exactly, so results are **bit-identical** while the
+host observes ``sum(mask)`` / ``sum(changed)`` between steps.
+
+Two properties the tests rely on:
+
+- **Pure observer.** The probed steps are distinct jit entry points, so
+  probing never perturbs the unprobed fixpoints' compilation cache; a
+  probed warm batch re-uses the *probe step's* compiled artifact (the
+  step bumps ``bump_trace_count`` at its own trace time, once per shape,
+  same discipline as the unprobed fixpoints).
+- **Δ accounting.** For idempotent carriers (bool) every table entry
+  flips zero→one at most once, so ``seed_facts + sum(delta_facts)``
+  equals the closure's fact count — the oracle's total derived facts.
+  For min-plus, ``delta_facts`` counts per-iteration *improvements*
+  (an entry may improve several times), still summing monotone work.
+
+Overhead caveat: the host syncs on the convergence mask every iteration
+(one small device→host transfer per step), so probe mode costs roughly
+one round-trip × iteration count — keep it off the steady-state path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.seminaive import DenseResult, _ne, bump_trace_count
+from ..core.sparse import CSRMatrix, csr_frontier_step
+
+__all__ = ["FixpointProbe", "fixpoint_dense_probed", "fixpoint_csr_probed"]
+
+
+@dataclasses.dataclass
+class FixpointProbe:
+    """Per-iteration observations from one probed fixpoint run."""
+
+    repr: str                 # "dense" | "csr"
+    iterations: int
+    frontier_rows: List[int]  # active (unconverged) rows entering each step
+    delta_facts: List[int]    # entries changed by each step (semi-naive Δ)
+    generated: List[int]      # pre-dedup facts produced by each step
+    seed_facts: int           # non-zero entries in the init frontier
+    final_facts: int          # non-zero entries in the fixpoint table
+
+    @property
+    def total_delta(self) -> int:
+        return sum(self.delta_facts)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@functools.partial(jax.jit, static_argnames=("sr", "matmul"))
+def _probe_step_dense(sr, arc, D, mask, matmul):
+    """One vector-form semi-naive step + host-visible Δ observations.
+
+    The D/mask math must mirror ``fixpoint_dense(form="vector")``'s body
+    op-for-op — that is what makes probed results bit-identical.
+    """
+    bump_trace_count()  # trace-time only: warm probed batches must not move it
+    mm = matmul or sr.matmul
+    zero = jnp.asarray(sr.zero, D.dtype)
+    rmask = mask if D.ndim == 1 else mask[:, None]
+    dm = jnp.where(rmask, D, zero)
+    upd = mm(dm[None, :], arc)[0] if D.ndim == 1 else mm(dm, arc)
+    Dn = sr.add(D, upd)
+    changed = _ne(sr, Dn, D)
+    gen = jnp.sum(upd != zero).astype(jnp.int64)
+    new_mask = jnp.any(changed, axis=-1) if D.ndim > 1 else changed
+    delta = jnp.sum(changed).astype(jnp.int64)
+    return Dn, new_mask, gen, delta
+
+
+@functools.partial(jax.jit, static_argnames=("spmv",))
+def _probe_step_csr(csr, D, mask, spmv):
+    """One CSR segment step, mirroring ``fixpoint_csr``'s body op-for-op."""
+    bump_trace_count()
+    sr = csr.semiring
+    step = spmv or csr_frontier_step(csr.kind)
+    zero = jnp.asarray(sr.zero, D.dtype)
+    rmask = mask if D.ndim == 1 else mask[:, None]
+    dm = jnp.where(rmask, D, zero)
+    upd = step(dm, csr)
+    Dn = sr.add(D, upd)
+    changed = _ne(sr, Dn, D)
+    gen = jnp.sum(upd != zero).astype(jnp.int64)
+    new_mask = jnp.any(changed, axis=-1) if D.ndim > 1 else changed
+    delta = jnp.sum(changed).astype(jnp.int64)
+    return Dn, new_mask, gen, delta
+
+
+@functools.partial(jax.jit, static_argnames=("sr",))
+def _count_facts(sr, x):
+    return jnp.sum(_ne(sr, x, jnp.asarray(sr.zero, x.dtype))).astype(jnp.int64)
+
+
+def _probed_loop(sr, init, max_iters: int, step_fn, repr_name: str
+                 ) -> Tuple[DenseResult, FixpointProbe]:
+    D = jnp.asarray(init)
+    mask = jnp.ones(D.shape[:-1] if D.ndim > 1 else D.shape, bool)
+    seed_facts = int(_count_facts(sr, D))
+    frontier_rows: List[int] = []
+    delta_facts: List[int] = []
+    generated: List[int] = []
+    it = 0
+    while it < max_iters:
+        active = int(jnp.sum(mask))  # host sync: the probe's observation point
+        if active == 0:
+            break
+        D, mask, gen, delta = step_fn(D, mask)
+        frontier_rows.append(active)
+        delta_facts.append(int(delta))
+        generated.append(int(gen))
+        it += 1
+    res = DenseResult(D, jnp.asarray(it, jnp.int32),
+                      jnp.asarray(sum(generated), jnp.int64))
+    probe = FixpointProbe(
+        repr=repr_name, iterations=it, frontier_rows=frontier_rows,
+        delta_facts=delta_facts, generated=generated,
+        seed_facts=seed_facts, final_facts=int(_count_facts(sr, D)))
+    return res, probe
+
+
+def fixpoint_dense_probed(
+    sr,
+    arc: jax.Array,
+    init: jax.Array,
+    form: str = "vector",
+    matmul: Optional[Callable] = None,
+    max_iters: Optional[int] = None,
+) -> Tuple[DenseResult, FixpointProbe]:
+    """Probed twin of ``fixpoint_dense_cached`` (vector form only — the
+    serving hot path). Returns ``(DenseResult, FixpointProbe)`` with the
+    result bit-identical to the unprobed fixpoint."""
+    if form != "vector":
+        raise NotImplementedError(
+            f"probed fixpoints cover the serving path (form='vector'); "
+            f"got form={form!r}")
+    if max_iters is None:
+        max_iters = 4 * init.shape[-1] + 8
+    step = lambda D, mask: _probe_step_dense(sr, arc, D, mask, matmul)
+    return _probed_loop(sr, init, max_iters, step, "dense")
+
+
+def fixpoint_csr_probed(
+    csr: CSRMatrix,
+    init: jax.Array,
+    spmv: Optional[Callable] = None,
+    max_iters: Optional[int] = None,
+) -> Tuple[DenseResult, FixpointProbe]:
+    """Probed twin of ``fixpoint_csr_cached``; result bit-identical."""
+    if max_iters is None:
+        max_iters = 4 * init.shape[-1] + 8
+    step = lambda D, mask: _probe_step_csr(csr, D, mask, spmv)
+    return _probed_loop(csr.semiring, init, max_iters, step, "csr")

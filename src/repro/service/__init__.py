@@ -9,10 +9,20 @@ continuous-batching admission front-end over it: callers submit single
 queries and get futures while a dispatcher coalesces arrivals into batched
 fixpoints with device/host overlap.  ``python -m repro.service.serve`` is
 the CLI front-end; ``benchmarks/bench_serve.py`` measures queries/sec.
+
+Observability (``repro.obs``) threads through the whole stack:
+``DatalogService(tracer=True)`` records Chrome-exportable spans,
+``metrics``/``svc.metrics`` is the unified counter/histogram registry
+(Prometheus + JSON exporters), ``probe=True`` surfaces per-iteration
+fixpoint Δs, and ``explain()["kernels"]`` reports roofline attribution.
+``MetricsRegistry`` and ``Tracer`` are re-exported here for convenience.
 """
+from ..obs.metrics import MetricsRegistry
+from ..obs.trace import Tracer
 from .admission import AdmissionStats, AsyncDatalogService, QueueFullError
 from .cache import CacheEntry, LRUCache
 from .session import DatalogService, ServiceStats
 
 __all__ = ["AdmissionStats", "AsyncDatalogService", "CacheEntry",
-           "DatalogService", "LRUCache", "QueueFullError", "ServiceStats"]
+           "DatalogService", "LRUCache", "MetricsRegistry", "QueueFullError",
+           "ServiceStats", "Tracer"]

@@ -118,7 +118,13 @@ class AsyncDatalogService:
         self.stats = AdmissionStats()
         self._fence = _inc.EpochFence()
         self._cv = threading.Condition()
-        self._waiting: deque = deque()  # (future, qlit): admitted, unflushed
+        #: (future, qlit, t_submit): admitted, unflushed — t_submit feeds the
+        #: queue-wait histogram at flush time
+        self._waiting: deque = deque()
+        self._h_qwait = service.metrics.histogram(
+            "datalog_queue_wait_seconds",
+            "admission to flush wait per admitted query")
+        service.metrics.register_collector(self._absorb_stats)
         self._outstanding = 0  # admitted futures not yet resolved
         self._inflight: "_queue.Queue" = _queue.Queue(maxsize=max(1, inflight))
         self._closed = False
@@ -190,8 +196,9 @@ class AsyncDatalogService:
                 raise QueueFullError(len(self._waiting))
             self.stats.submitted += 1
             self._outstanding += 1
-            self._waiting.append((fut, qlit))
+            self._waiting.append((fut, qlit, time.monotonic()))
             self._cv.notify_all()
+        svc.tracer.instant("submit", cat="admission", pred=qlit.pred)
         return fut
 
     def ask(self, query, timeout: float | None = None):
@@ -224,21 +231,57 @@ class AsyncDatalogService:
     # -- introspection -------------------------------------------------------
 
     def explain(self) -> dict:
+        """:meth:`DatalogService.explain`'s report with an ``admission``
+        section in the unified schema::
+
+            admission:
+              queue:    {depth, limit}
+              window:   {max_wait_ms, max_batch, mean_flush, max_flush}
+              counters: AdmissionStats as a flat dict
+
+        The pre-unification flat keys (``queue_depth``, ``queue_limit``,
+        ``max_wait_ms``, ``max_batch``, ``mean_flush`` and the bare counter
+        names) remain as deprecated aliases for one release.
+        """
         with self.svc.lock:
             rep = self.svc.explain()
         with self._cv:
             depth = len(self._waiting)
         st = dataclasses.asdict(self.stats)
+        mean_flush = (self.stats.flushed_queries / self.stats.flushes
+                      if self.stats.flushes else 0.0)
         rep["admission"] = {
+            "queue": {"depth": depth, "limit": self.queue_depth},
+            "window": {"max_wait_ms": self.max_wait * 1000.0,
+                       "max_batch": self.max_batch,
+                       "mean_flush": mean_flush,
+                       "max_flush": st["max_flush"]},
+            "counters": dict(st),
+            # deprecated flat aliases (one release):
             "queue_depth": depth,
             "queue_limit": self.queue_depth,
             "max_wait_ms": self.max_wait * 1000.0,
             "max_batch": self.max_batch,
-            "mean_flush": (self.stats.flushed_queries / self.stats.flushes
-                           if self.stats.flushes else 0.0),
+            "mean_flush": mean_flush,
             **st,
         }
         return rep
+
+    def _absorb_stats(self, m) -> None:
+        """Absorb :class:`AdmissionStats` + queue depth into the unified
+        metric schema at export time (see ``DatalogService._absorb_stats``)."""
+        st = dataclasses.asdict(self.stats)
+        with self._cv:
+            depth = len(self._waiting)
+        adm = m.counter("datalog_admission_total",
+                        "admission front-end counters, by event")
+        for k, v in st.items():
+            if k != "max_flush":
+                adm.set(v, {"event": k})
+        m.gauge("datalog_queue_depth",
+                "waiting (admitted, unflushed) queries").set(depth)
+        m.gauge("datalog_admission_max_flush",
+                "largest single flush").set(st["max_flush"])
 
     def drain(self, timeout: float = 60.0) -> "AsyncDatalogService":
         """Block until every admitted query has resolved (load generators
@@ -265,6 +308,7 @@ class AsyncDatalogService:
                     return
                 # coalescing window: flush when the oldest arrival has aged
                 # max_wait or the window filled to max_batch
+                span = self.svc.tracer.span("coalesce", cat="admission")
                 deadline = time.monotonic() + self.max_wait
                 while len(self._waiting) < self.max_batch and not self._closed:
                     left = deadline - time.monotonic()
@@ -273,6 +317,8 @@ class AsyncDatalogService:
                     self._cv.wait(timeout=left)
                 take = min(len(self._waiting), self.max_batch)
                 items = [self._waiting.popleft() for _ in range(take)]
+                span.annotate(batch=take)
+                span.end()
                 self._cv.notify_all()
             if items:
                 self._flush(items)
@@ -281,8 +327,11 @@ class AsyncDatalogService:
         """Launch one flush under the fence's read side; hand the pending
         batch to the finalizer.  The read side stays held (by the pending)
         until finalize completes — appends drain us, not the reverse."""
-        futs = [f for f, _ in items]
-        qlits = [q for _, q in items]
+        futs = [f for f, _, _ in items]
+        qlits = [q for _, q, _ in items]
+        now = time.monotonic()
+        for _, _, t_submit in items:
+            self._h_qwait.observe(now - t_submit)
         self._fence.acquire_read()
         try:
             with self.svc.lock:

@@ -24,6 +24,7 @@ import numpy as np
 from ..core import sparse as _sparse
 from ..core.semiring import Semiring
 from ..core.seminaive import DenseResult, fixpoint_dense_cached
+from ..obs.fixpoint_probe import fixpoint_csr_probed, fixpoint_dense_probed
 
 
 def pad_batch_size(b: int, pads: tuple[int, ...]) -> int:
@@ -57,6 +58,7 @@ def run_frontier_batch(
     mesh=None,
     max_iters: int | None = None,
     init: jax.Array | None = None,
+    probe: bool = False,
 ) -> DenseResult:
     """One batched fixpoint answering ``len(srcs)`` single-source queries.
 
@@ -65,6 +67,11 @@ def run_frontier_batch(
     so resume and cold batches share this dispatch (and its compilations).
     Returns a :class:`DenseResult` whose table's first ``len(srcs)`` rows are
     the closure rows of the requested sources (pad rows follow).
+
+    ``probe=True`` routes through the probed fixpoint twin
+    (``obs.fixpoint_probe``) and returns ``(DenseResult, FixpointProbe)``
+    with a bit-identical result; the mesh path has no probed twin and
+    returns ``(DenseResult, None)``.
     """
     b = len(srcs)
     bp = pad_batch_size(b, pads)
@@ -86,7 +93,11 @@ def run_frontier_batch(
         init = jnp.concatenate([init, fill])
     if mesh is not None:
         closed, iters = _sharded(mesh, sr, matrix, init, matmul, max_iters)
-        return DenseResult(closed, iters, jnp.int64(0))
+        res = DenseResult(closed, iters, jnp.int64(0))
+        return (res, None) if probe else res
+    if probe:
+        return fixpoint_dense_probed(sr, matrix, init, form="vector",
+                                     matmul=matmul, max_iters=max_iters)
     return fixpoint_dense_cached(sr, matrix, init, form="vector",
                                  matmul=matmul, max_iters=max_iters)
 
@@ -105,6 +116,7 @@ def run_frontier_batch_csr(
     mesh=None,
     max_iters: int | None = None,
     init: jax.Array | None = None,
+    probe: bool = False,
 ) -> DenseResult:
     """CSR twin of :func:`run_frontier_batch`: the same (B, n) batched
     frontier fixpoint with per-row convergence masking, but each iteration is
@@ -138,7 +150,10 @@ def run_frontier_batch_csr(
         from ..core.distributed import csr_frontier_decomposable
         closed, iters = csr_frontier_decomposable(mesh, csr, init, spmv=spmv,
                                                   max_iters=max_iters)
-        return DenseResult(closed, iters, jnp.int64(0))
+        res = DenseResult(closed, iters, jnp.int64(0))
+        return (res, None) if probe else res
+    if probe:
+        return fixpoint_csr_probed(csr, init, spmv=spmv, max_iters=max_iters)
     return _sparse.fixpoint_csr_cached(csr, init, spmv=spmv,
                                        max_iters=max_iters)
 

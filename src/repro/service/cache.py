@@ -18,6 +18,7 @@ Every entry records the ``epoch`` (append counter) it was computed at —
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import OrderedDict
 from typing import Any, Callable, Hashable
 
@@ -57,35 +58,47 @@ class LRUCache:
     ``capacity <= 0`` disables caching (every ``get`` misses, ``put`` is a
     no-op) so the serving benchmarks can measure uncached throughput through
     the same code path.
+
+    Thread safety: the async front-end's submit-time short-circuit probes
+    the cache from *caller* threads while the dispatcher/finalizer mutate
+    it, so every method (including the ``hits``/``ent.hits`` bumps that
+    used to be bare ``+=``) runs under an internal lock.  The lock never
+    calls out while held, so it composes with the service lock in either
+    order without deadlock.
     """
 
     def __init__(self, capacity: int):
         self.capacity = capacity
         self._entries: "OrderedDict[Hashable, CacheEntry]" = OrderedDict()
+        self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     def __contains__(self, key: Hashable) -> bool:
-        return key in self._entries
+        with self._lock:
+            return key in self._entries
 
     def get(self, key: Hashable) -> CacheEntry | None:
-        ent = self._entries.get(key)
-        if ent is None:
-            self.misses += 1
-            return None
-        self._entries.move_to_end(key)
-        self.hits += 1
-        ent.hits += 1
-        return ent
+        with self._lock:
+            ent = self._entries.get(key)
+            if ent is None:
+                self.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.hits += 1
+            ent.hits += 1
+            return ent
 
     def peek(self, key: Hashable) -> CacheEntry | None:
         """Read an entry without touching LRU order or hit/miss counters —
         for maintenance passes (append-resume policy), not serving."""
-        return self._entries.get(key)
+        with self._lock:
+            return self._entries.get(key)
 
     def get_fresh(self, key: Hashable, epoch: int) -> CacheEntry | None:
         """:meth:`get`, but only when the entry's epoch matches.
@@ -94,39 +107,45 @@ class LRUCache:
         from caller threads; unlike the batch path (which *asserts* epoch
         freshness under the fence) a mismatched entry here is simply a miss
         — the query is admitted and recomputed at the current epoch."""
-        ent = self._entries.get(key)
-        if ent is None or ent.epoch != epoch:
-            self.misses += 1
-            return None
-        self._entries.move_to_end(key)
-        self.hits += 1
-        ent.hits += 1
-        return ent
+        with self._lock:
+            ent = self._entries.get(key)
+            if ent is None or ent.epoch != epoch:
+                self.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.hits += 1
+            ent.hits += 1
+            return ent
 
     def put(self, key: Hashable, entry: CacheEntry) -> None:
         if self.capacity <= 0:
             return
-        if key in self._entries:
-            self._entries.move_to_end(key)
-        self._entries[key] = entry
-        while len(self._entries) > self.capacity:
-            self._entries.popitem(last=False)
-            self.evictions += 1
+        with self._lock:
+            if key in self._entries:
+                self._entries.move_to_end(key)
+            self._entries[key] = entry
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+                self.evictions += 1
 
     def replace(self, key: Hashable, entry: CacheEntry) -> None:
         """Refresh an entry in place without bumping its LRU position —
         append-driven refreshes are maintenance, not access recency."""
-        if key in self._entries:
-            self._entries[key] = entry
+        with self._lock:
+            if key in self._entries:
+                self._entries[key] = entry
 
     def drop_where(self, pred: Callable[[Hashable, CacheEntry], bool]) -> int:
-        stale = [k for k, e in self._entries.items() if pred(k, e)]
-        for k in stale:
-            del self._entries[k]
-        return len(stale)
+        with self._lock:
+            stale = [k for k, e in self._entries.items() if pred(k, e)]
+            for k in stale:
+                del self._entries[k]
+            return len(stale)
 
     def items(self) -> list[tuple[Hashable, CacheEntry]]:
-        return list(self._entries.items())
+        with self._lock:
+            return list(self._entries.items())
 
     def clear(self) -> None:
-        self._entries.clear()
+        with self._lock:
+            self._entries.clear()

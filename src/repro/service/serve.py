@@ -92,16 +92,20 @@ def _parse_append(spec: str) -> tuple[str, np.ndarray]:
 
 
 def _repl(svc) -> None:
-    print("serve> tc(1,X) queries | +arc:4,5 appends | :stats | :quit",
-          file=sys.stderr)
+    print("serve> tc(1,X) queries | +arc:4,5 appends | .stats | .metrics "
+          "| :quit", file=sys.stderr)
     for line in sys.stdin:
         line = line.strip()
         if not line:
             continue
-        if line in (":quit", ":q"):
+        if line in (":quit", ":q", ".quit", ".q"):
             break
-        if line == ":stats":
-            print(json.dumps(svc.explain(), indent=2))
+        if line in (".stats", ":stats"):  # :stats is the legacy spelling
+            print(json.dumps(svc.explain(), indent=2, default=str))
+            continue
+        if line == ".metrics":
+            metrics = getattr(svc, "svc", svc).metrics
+            print(metrics.to_prometheus(), end="")
             continue
         try:
             if line.startswith("+"):
@@ -153,6 +157,14 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--default-cap", type=int, default=1 << 16)
     ap.add_argument("--stats", action="store_true",
                     help="print service stats after all actions")
+    ap.add_argument("--metrics-out", metavar="FILE",
+                    help="export the unified metrics registry after all "
+                         "actions: Prometheus text for .prom/.txt, JSON "
+                         "otherwise")
+    ap.add_argument("--trace-out", metavar="FILE.json",
+                    help="record spans and export a Chrome trace_event "
+                         "timeline (chrome://tracing / Perfetto) after all "
+                         "actions")
     ap.add_argument("--repl", action="store_true",
                     help="read queries/appends from stdin after the actions")
     args = ap.parse_args(argv)
@@ -171,7 +183,8 @@ def main(argv: list[str] | None = None) -> int:
     svc = DatalogService(program, db, result_cache=args.cache,
                          default_cap=args.default_cap,
                          sparse={"auto": None, "csr": True,
-                                 "dense": False}[args.sparse])
+                                 "dense": False}[args.sparse],
+                         tracer=bool(args.trace_out))
     front = None
     if args.use_async:
         from .admission import AsyncDatalogService
@@ -215,7 +228,13 @@ def main(argv: list[str] | None = None) -> int:
     if front is not None:
         front.drain()
     if args.stats:
-        print(json.dumps(serve.explain(), indent=2))
+        print(json.dumps(serve.explain(), indent=2, default=str))
+    if args.metrics_out:
+        svc.metrics.export(args.metrics_out)
+        print(f"metrics -> {args.metrics_out}", file=sys.stderr)
+    if args.trace_out:
+        svc.tracer.export_chrome(args.trace_out)
+        print(f"trace -> {args.trace_out}", file=sys.stderr)
     if front is not None:
         front.close()
     return 0

@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from collections import OrderedDict
 
 import jax.numpy as jnp
@@ -37,7 +38,8 @@ import numpy as np
 from ..core import sparse as _sparse
 
 from ..core.engine import (CapacityError, Engine, as_query_literal,
-                           query_row_mask, split_qid_answers)
+                           fixpoint_trace_count, query_row_mask,
+                           split_qid_answers)
 from ..core.ir import Const, Literal, Program, Rule, Var, fresh_var
 from ..core.magic import (BOUND, FrontierLowering, MagicError, agg_positions,
                           attribute_qids, detect_frontier_lowering,
@@ -47,9 +49,16 @@ from ..core.magic import rewrite as magic_rewrite
 from ..core.parser import parse_program
 from ..core.planner import PlanError, demanded_strata
 from ..core.semiring import BOOL, MIN_PLUS
+from ..obs.metrics import NULL_METRICS, MetricsRegistry
+from ..obs.roofline_attr import (KernelAttribution, csr_launch_cost,
+                                 dense_launch_cost)
+from ..obs.trace import NULL_TRACER, Tracer
 from . import batch as _batch
 from . import incremental as _inc
 from .cache import CacheEntry, LRUCache
+
+#: batch-size histogram buckets (queries per launched batch)
+_BATCH_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024)
 
 
 @dataclasses.dataclass
@@ -83,7 +92,9 @@ class _PendingBatch:
     qlits: list
     out: list  # answer slots; EDB selections fill at launch
     hits: list = dataclasses.field(default_factory=list)  # (slot, CacheEntry)
-    #: [(pred, _DenseRelation, items, uniq_srcs, in_range, DenseResult|None)]
+    #: [(pred, _DenseRelation, items, uniq_srcs, in_range, DenseResult|None,
+    #:   launch_meta)] — launch_meta carries the launch timestamp + batch
+    #: width for the roofline attribution recorded at device sync
     dense: list = dataclasses.field(default_factory=list)
     #: [(pred, items, uniq, (template, launched)|None, results|None)]
     tuples: list = dataclasses.field(default_factory=list)
@@ -174,14 +185,23 @@ class _DenseRelation:
 
     def run_batch(self, svc: "DatalogService", srcs: list[int], init=None):
         """One batched frontier fixpoint over this relation's representation
-        (``init`` overrides the seed — append-resume)."""
+        (``init`` overrides the seed — append-resume).  In probe mode the
+        probed twin runs instead (bit-identical result) and its per-iteration
+        observations land on ``svc.last_probes``."""
         if self.is_csr:
-            return _batch.run_frontier_batch_csr(
+            res = _batch.run_frontier_batch_csr(
                 self.csr, srcs, svc.batch_pads, spmv=svc._spmv(self.low.kind),
-                mesh=svc.mesh, init=init)
-        return _batch.run_frontier_batch(
-            self.sr, self.matrix, srcs, svc.batch_pads,
-            matmul=svc._matmul(self.sr), mesh=svc.mesh, init=init)
+                mesh=svc.mesh, init=init, probe=svc.probe)
+        else:
+            res = _batch.run_frontier_batch(
+                self.sr, self.matrix, srcs, svc.batch_pads,
+                matmul=svc._matmul(self.sr), mesh=svc.mesh, init=init,
+                probe=svc.probe)
+        if svc.probe:
+            res, pr = res
+            if pr is not None:
+                svc._record_probe(pr)
+        return res
 
     def append(self, svc: "DatalogService", rows: np.ndarray) -> bool:
         """Fold appended arcs in; returns True when the domain outgrew the
@@ -469,6 +489,21 @@ class DatalogService:
                       last-batch-only legacy behavior; 0 disables).
     ``bucket_floors`` per-relation ``quantize_rows`` floors threaded into
                       every engine (see ``benchmarks/bench_buckets.py``).
+    ``metrics``       unified metrics registry (``obs.metrics``): ``None``/
+                      ``True`` creates one (the default-on path, per-batch
+                      observes only), ``False`` disables (NullMetrics — the
+                      overhead-guard baseline), or pass a shared
+                      ``MetricsRegistry``.
+    ``tracer``        span tracer (``obs.trace``): ``None``/``False`` is the
+                      no-op ``NULL_TRACER``, ``True`` creates a recording
+                      ``Tracer``, or pass one (``svc.tracer.export_chrome``
+                      writes the timeline).
+    ``probe``         route dense/CSR frontier fixpoints through the probed
+                      twins (``obs.fixpoint_probe``): results stay
+                      bit-identical, per-iteration frontier/Δ observations
+                      accumulate on ``last_probes`` and ``explain()``.
+                      Costs one host sync per fixpoint iteration — keep off
+                      the steady-state path.
     """
 
     def __init__(self, program, db: dict[str, np.ndarray], *, bits: int = 18,
@@ -481,7 +516,8 @@ class DatalogService:
                  resume_max_bytes: int = 0, sparse: bool | None = None,
                  sparse_threshold: float | None = None,
                  csr_rebuild_frac: float = 0.25, snapshot_lru: int = 1,
-                 bucket_floors: dict[str, int] | None = None):
+                 bucket_floors: dict[str, int] | None = None,
+                 metrics=None, tracer=None, probe: bool = False):
         if isinstance(program, str):
             program = parse_program(program, constants=constants)
         self.program = program
@@ -521,6 +557,32 @@ class DatalogService:
         #: use; the admission front-end (``admission.py``) launches flushes,
         #: finalizes them and probes the cache from different threads.
         self.lock = threading.RLock()
+        # -- observability (obs/): tracer, metrics, probes, roofline ---------
+        self.probe = bool(probe)
+        self.last_probes: list = []  # recent FixpointProbe records (capped)
+        if tracer is None or tracer is False:
+            self.tracer = NULL_TRACER
+        elif tracer is True:
+            self.tracer = Tracer()
+        else:
+            self.tracer = tracer
+        if metrics is False:
+            self.metrics = NULL_METRICS
+        elif metrics is None or metrics is True:
+            self.metrics = MetricsRegistry()
+        else:
+            self.metrics = metrics
+        self.kernels = KernelAttribution()
+        self._h_device = self.metrics.histogram(
+            "datalog_device_seconds",
+            "launch to device-sync wall time per batched fixpoint")
+        self._h_finalize = self.metrics.histogram(
+            "datalog_finalize_seconds",
+            "host-side split/format/cache-fill time per finalized batch")
+        self._h_batch = self.metrics.histogram(
+            "datalog_batch_size", "queries per launched batch",
+            buckets=_BATCH_BUCKETS)
+        self.metrics.register_collector(self._absorb_stats)
 
     # -- queries -------------------------------------------------------------
 
@@ -553,7 +615,9 @@ class DatalogService:
         selection / dense-coalescible / tuple shape) and dispatch every
         device fixpoint.  Returns the in-flight state for
         :meth:`finalize_batch`; must run under :attr:`lock`."""
-        with self.lock:
+        with self.lock, self.tracer.span("launch_batch", cat="service",
+                                         batch=len(queries)):
+            self._h_batch.observe(len(queries))
             qlits = [self._as_literal(s) for s in queries]
             pending = _PendingBatch(epoch=self.epoch, qlits=qlits,
                                     out=[None] * len(qlits))
@@ -595,46 +659,55 @@ class DatalogService:
         append must never land between a batch's launch and its cache fill
         (``incremental.EpochFence`` enforces this for the async front-end).
         """
-        dense_done = []
-        for pred, ds, items, uniq, in_range, res in pending.dense:
-            # ONE host transfer per group (the device sync of the whole
-            # batched fixpoint); per-row jax indexing would compile a tiny
-            # gather per (shape, row) pair on the serving hot path
-            table = np.asarray(res.table) if in_range else None
-            formatted = {s: (self._format(ds, s, table[j]), table[j])
-                         for j, s in enumerate(in_range)}
-            dense_done.append((pred, ds, items, uniq, formatted))
-        tuple_done = []
-        for pred, items, uniq, launched, results in pending.tuples:
-            if results is None:  # batched: split the captured model now
-                tpl, run = launched
-                answers = tpl.finalize_launched(self, run)
-                results = {key: _freeze(res)
-                           for (key, _), res in zip(uniq, answers)}
-            tuple_done.append((pred, items, results))
-        with self.lock:
-            assert pending.epoch == self.epoch, \
-                "append overtook an in-flight batch (epoch fence violated)"
-            out = pending.out
-            for i, ent in pending.hits:
-                out[i] = self._entry_result(ent)
-            for pred, ds, items, uniq, formatted in dense_done:
-                final: dict[int, object] = {}
-                for s, (fmt, raw) in formatted.items():
-                    self._cache_dense(pred, s, fmt, raw)
-                    final[s] = fmt
-                for s in uniq:
-                    if s not in final:  # beyond the domain: nothing reachable
-                        final[s] = self._empty_dense(ds, s)
-                for i, src, _ in items:
-                    out[i] = final[src]
-            for pred, items, results in tuple_done:
-                for key, res in results.items():
-                    self.cache.put(key, CacheEntry("tuple", pred, res,
-                                                   self.epoch))
-                for i, q in items:
-                    out[i] = results[self._cache_key(q)]
-            return out
+        with self.tracer.span("finalize_batch", cat="service",
+                              batch=len(pending.qlits)):
+            t_fin = time.monotonic()
+            dense_done = []
+            for pred, ds, items, uniq, in_range, res, meta in pending.dense:
+                # ONE host transfer per group (the device sync of the whole
+                # batched fixpoint); per-row jax indexing would compile a tiny
+                # gather per (shape, row) pair on the serving hot path
+                with self.tracer.span("device_sync", cat="device", pred=pred):
+                    table = np.asarray(res.table) if in_range else None
+                if in_range:
+                    self._attribute_launch(ds, res, meta)
+                formatted = {s: (self._format(ds, s, table[j]), table[j])
+                             for j, s in enumerate(in_range)}
+                dense_done.append((pred, ds, items, uniq, formatted))
+            tuple_done = []
+            for pred, items, uniq, launched, results in pending.tuples:
+                if results is None:  # batched: split the captured model now
+                    tpl, run = launched
+                    with self.tracer.span("tuple_split", cat="service",
+                                          pred=pred):
+                        answers = tpl.finalize_launched(self, run)
+                    results = {key: _freeze(res)
+                               for (key, _), res in zip(uniq, answers)}
+                tuple_done.append((pred, items, results))
+            with self.lock, self.tracer.span("cache_fill", cat="service"):
+                assert pending.epoch == self.epoch, \
+                    "append overtook an in-flight batch (epoch fence violated)"
+                out = pending.out
+                for i, ent in pending.hits:
+                    out[i] = self._entry_result(ent)
+                for pred, ds, items, uniq, formatted in dense_done:
+                    final: dict[int, object] = {}
+                    for s, (fmt, raw) in formatted.items():
+                        self._cache_dense(pred, s, fmt, raw)
+                        final[s] = fmt
+                    for s in uniq:
+                        if s not in final:  # beyond the domain: unreachable
+                            final[s] = self._empty_dense(ds, s)
+                    for i, src, _ in items:
+                        out[i] = final[src]
+                for pred, items, results in tuple_done:
+                    for key, res in results.items():
+                        self.cache.put(key, CacheEntry("tuple", pred, res,
+                                                       self.epoch))
+                    for i, q in items:
+                        out[i] = results[self._cache_key(q)]
+                self._h_finalize.observe(time.monotonic() - t_fin)
+                return out
 
     # -- appends -------------------------------------------------------------
 
@@ -646,7 +719,7 @@ class DatalogService:
         (``incremental.py``) so hot entries stay warm; everything else (and,
         under ``resume_min_hits``, the cold tail) is invalidated.
         """
-        with self.lock:
+        with self.lock, self.tracer.span("append", cat="service", rel=rel):
             if rel not in self.db:
                 raise ValueError(
                     f"{rel!r} is not an EDB relation of this service "
@@ -717,9 +790,32 @@ class DatalogService:
     # -- introspection -------------------------------------------------------
 
     def explain(self) -> dict:
-        return {
+        """Introspection report — ONE documented schema across the stack.
+
+        Canonical keys:
+
+        ``epoch``      service append epoch (int)
+        ``service``    :class:`ServiceStats` counters as a flat dict
+        ``cache``      ``{entries, hits, misses, evictions}``
+        ``templates``  memoized ``pred/adornment`` shapes (sorted list)
+        ``relations``  per-predicate carrier reports: ``{n, n_alloc,
+                       semiring, repr}`` plus ``flips``/``last_flip`` after
+                       representation flips and ``nnz``/``density`` for CSR
+        ``kernels``    roofline attribution per kernel
+                       (:meth:`~repro.obs.roofline_attr.KernelAttribution.report`)
+        ``probes``     recent per-iteration fixpoint observations (probe
+                       mode only; :class:`~repro.obs.FixpointProbe` dicts)
+
+        The async front-end nests its report under ``admission``
+        (``{queue, window, counters}`` — see
+        :meth:`~repro.service.admission.AsyncDatalogService.explain`).
+
+        Deprecated aliases, kept for one release: ``stats`` (= ``service``)
+        and ``dense`` (= ``relations``).
+        """
+        rep = {
             "epoch": self.epoch,
-            "stats": dataclasses.asdict(self.stats),
+            "service": dataclasses.asdict(self.stats),
             "cache": {"entries": len(self.cache), "hits": self.cache.hits,
                       "misses": self.cache.misses,
                       "evictions": self.cache.evictions},
@@ -727,16 +823,95 @@ class DatalogService:
                 f"{p}/{a}" + ("+qid" if t.batchable else "")
                 + (f"+snap{len(t._snaps)}" if t._snaps else "")
                 for (p, a), t in self._templates.items()),
-            "dense": {p: {"n": ds.n, "n_alloc": ds.n_alloc,
-                          "semiring": ds.sr.name,
-                          "repr": "csr" if ds.is_csr else "dense",
-                          **({"flips": ds.flips, "last_flip": ds.last_flip}
-                             if ds.flips else {}),
-                          **({"nnz": int(ds.csr.nnz) + int(ds.csr.tail_nnz),
-                              "density": ds.csr.density()}
-                             if ds.is_csr else {})}
-                      for p, ds in self._dense.items()},
+            "relations": {p: {"n": ds.n, "n_alloc": ds.n_alloc,
+                              "semiring": ds.sr.name,
+                              "repr": "csr" if ds.is_csr else "dense",
+                              **({"flips": ds.flips,
+                                  "last_flip": ds.last_flip}
+                                 if ds.flips else {}),
+                              **({"nnz": int(ds.csr.nnz)
+                                  + int(ds.csr.tail_nnz),
+                                  "density": ds.csr.density()}
+                                 if ds.is_csr else {})}
+                          for p, ds in self._dense.items()},
+            "kernels": self.kernels.report(),
         }
+        if self.probe:
+            rep["probes"] = [p.as_dict() for p in self.last_probes]
+        rep["stats"] = rep["service"]       # deprecated alias (one release)
+        rep["dense"] = rep["relations"]     # deprecated alias (one release)
+        return rep
+
+    def _record_probe(self, pr) -> None:
+        self.last_probes.append(pr)
+        del self.last_probes[:-64]  # bounded: recent batches only
+
+    def _attribute_launch(self, ds: _DenseRelation, res, meta: dict) -> None:
+        """Roofline attribution at the device sync point: measured
+        launch→sync wall time + the analytic flop/byte model for the padded
+        batch that actually ran (``obs.roofline_attr``)."""
+        secs = time.monotonic() - meta["t_launch"]
+        self._h_device.observe(secs)
+        iters = int(res.iterations)
+        bp = _batch.pad_batch_size(max(meta["b"], 1), self.batch_pads)
+        if ds.is_csr:
+            e_alloc = int(np.prod(ds.csr.ell_idx.shape)) \
+                + int(np.prod(ds.csr.tail_ell.shape))
+            cost = csr_launch_cost(bp, ds.n_alloc, e_alloc,
+                                   ds.csr.edge_val.dtype.itemsize, iters)
+            kernel = f"csr_spmv:{ds.low.kind}"
+        else:
+            cost = dense_launch_cost(bp, ds.n_alloc,
+                                     ds.matrix.dtype.itemsize, iters)
+            kernel = f"frontier_matmul:{ds.low.kind}"
+        self.kernels.record(kernel, seconds=secs, iterations=iters, **cost)
+
+    def _absorb_stats(self, m) -> None:
+        """Export-time absorption (``MetricsRegistry.register_collector``):
+        the hot paths keep their cheap dataclass ``+=``s; every exporter
+        sees them through the unified ``datalog_*`` schema."""
+        with self.lock:
+            st = dataclasses.asdict(self.stats)
+            cache_hits, cache_misses = self.cache.hits, self.cache.misses
+            cache_evicts, cache_len = self.cache.evictions, len(self.cache)
+            epoch = self.epoch
+        fx = m.counter("datalog_fixpoints_total",
+                       "batched frontier/tuple fixpoints launched, by repr")
+        fx.set(st["dense_fixpoints"] - st["csr_fixpoints"], {"repr": "dense"})
+        fx.set(st["csr_fixpoints"], {"repr": "csr"})
+        fx.set(st["tuple_fixpoints"], {"repr": "tuple"})
+        bq = m.counter("datalog_batched_queries_total",
+                       "queries answered by batched fixpoints, by engine")
+        bq.set(st["batched_queries"], {"engine": "frontier"})
+        bq.set(st["tuple_batched_queries"], {"engine": "tuple"})
+        for name, field, help_ in (
+            ("datalog_plans_built_total", "plans_built",
+             "query templates constructed (magic rewrite + plan)"),
+            ("datalog_plan_hits_total", "plan_hits",
+             "queries served by a memoized template"),
+            ("datalog_tuple_runs_total", "tuple_runs",
+             "PSN template evaluations"),
+            ("datalog_appends_total", "appends", "monotone EDB appends"),
+            ("datalog_resumed_rows_total", "resumed_rows",
+             "cached dense closures refreshed by append-resume"),
+            ("datalog_resumed_tuple_rows_total", "resumed_tuple_rows",
+             "tuple answers refreshed by snapshot resume"),
+            ("datalog_dropped_cold_total", "dropped_cold",
+             "cold cache entries dropped instead of resumed"),
+        ):
+            m.counter(name, help_).set(st[field])
+        m.counter("datalog_cache_hits_total",
+                  "result-cache hits").set(cache_hits)
+        m.counter("datalog_cache_misses_total",
+                  "result-cache misses").set(cache_misses)
+        m.counter("datalog_cache_evictions_total",
+                  "result-cache evictions").set(cache_evicts)
+        m.gauge("datalog_cache_entries",
+                "resident result-cache entries").set(cache_len)
+        m.gauge("datalog_epoch", "service append epoch").set(epoch)
+        m.counter("datalog_fixpoint_traces_total",
+                  "fixpoint jit compilations, process-wide").set(
+            fixpoint_trace_count())
 
     # -- internals -----------------------------------------------------------
 
@@ -833,12 +1008,16 @@ class DatalogService:
                 uniq.append(src)
         in_range = [s for s in uniq if s < ds.n_alloc]
         res = None
+        meta = {"t_launch": time.monotonic(), "b": len(in_range)}
         if in_range:
-            res = ds.run_batch(self, in_range)
+            with self.tracer.span("fixpoint", cat="device", pred=pred,
+                                  repr="csr" if ds.is_csr else "dense",
+                                  b=len(in_range)):
+                res = ds.run_batch(self, in_range)
             self.stats.dense_fixpoints += 1
             self.stats.csr_fixpoints += 1 if ds.is_csr else 0
             self.stats.batched_queries += len(in_range)
-        return (pred, ds, items, uniq, in_range, res)
+        return (pred, ds, items, uniq, in_range, res, meta)
 
     def _cache_dense(self, pred: str, src: int, formatted, raw):
         low = self._lowering(pred)

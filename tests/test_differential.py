@@ -20,6 +20,11 @@ fixpoint over Python sets — on EIGHT evaluation paths:
                                  flush composition is timing-dependent, so
                                  answers are compared as sets — the invariant
                                  is that coalescing NEVER changes an answer)
+  9. observed serving            (``probe=True`` + ``tracer=True``: the
+                                 probed fixpoint twins and span recording
+                                 must be bit-identical to the plain dense
+                                 service, and re-serving a warm batch must
+                                 not retrace any fixpoint)
 
 Case count defaults to a CI-smoke size; ``DIFF_CASES=200 pytest
 tests/test_differential.py`` runs the acceptance-sized sweep (the generator
@@ -189,6 +194,26 @@ def test_differential(case):
         check("service-async", case, queries[i], f.result(timeout=120),
               want[i])
     front.close()
+
+    # 9. observed serving: probes + tracing on must not perturb answers —
+    # bit-identical to the plain dense service — and warm re-serving must
+    # be retrace-free (probed twins keep their own jit cache)
+    from repro.core.engine import fixpoint_trace_count
+    svc_obs = DatalogService(text, db=db, probe=True, tracer=True, **CAPS)
+    for i, got in enumerate(svc_obs.ask_batch(queries)):
+        check("service-observed", case, queries[i], got, want[i])
+        d = dense_res[i]
+        for a, b in zip(d if isinstance(d, tuple) else (d,),
+                        got if isinstance(got, tuple) else (got,)):
+            assert np.array_equal(a, b), \
+                f"case={case} query={queries[i]!r}: observed not bit-identical"
+    for p in svc_obs.last_probes:  # Δ accounting holds on every probed run
+        assert p.seed_facts + p.total_delta == p.final_facts, (case, p)
+    tc0 = fixpoint_trace_count()
+    for i, got in enumerate(svc_obs.ask_batch(queries)):  # warm batch
+        check("service-observed-warm", case, queries[i], got, want[i])
+    assert fixpoint_trace_count() == tc0, \
+        f"case={case}: warm observed batch retraced a fixpoint"
 
     # 6. append-resume: serve a prefix EDB, append the tail, re-serve
     rel = SHAPES[shape][2][0]
