@@ -104,7 +104,33 @@ def bench(smoke: bool) -> dict:
     # sanity: a floor covering the whole size mix must collapse the seed
     # shapes — strictly fewer (or equal) re-traces than the tightest floor
     assert rec["floors"][-1]["retraces"] <= rec["floors"][0]["retraces"]
+    rec["ell_padding"] = ell_padding(smoke)
     return rec
+
+
+def ell_padding(smoke: bool) -> list[dict]:
+    """Sliced-ELL padding waste (``e_alloc``/|E| per slice): the other
+    shape-bucket knob.  Single-width pads every vertex row to the hub's
+    capacity; the ladder pads within degree classes only."""
+    from repro.core.sparse import build_csr
+    from repro.data.graphs import powerlaw_graph
+
+    n, m = (256, 1500) if smoke else (2048, 16000)
+    graphs = [("tree-h5", tree_graph(5, seed=7, min_deg=3, max_deg=4)),
+              (f"powerlaw-n{n}", powerlaw_graph(n, m, alpha=1.5, seed=13))]
+    out = []
+    for name, edges in graphs:
+        nv = int(edges.max()) + 1
+        for floor, stride in ((1, 0), (1, 1), (4, 2)):
+            csr = build_csr(edges, nv, "bool", ell_cfg=(floor, stride))
+            w = csr.padding_waste()
+            out.append({"graph": name, "edges": int(len(edges)),
+                        "ell_cfg": [floor, stride], "e_alloc": w["e_alloc"],
+                        "waste": w["waste"], "slices": w["slices"]})
+            print(f"  {name} ell_cfg=({floor},{stride}): "
+                  f"e_alloc/|E| = {w['waste']:.2f}x over "
+                  f"{len(w['slices'])} slice(s)", flush=True)
+    return out
 
 
 def main():

@@ -4,8 +4,19 @@ On this container the interpret-mode wall time is NOT the figure of merit
 (the kernel body runs op-by-op in Python); the derived column therefore
 reports the *algorithmic* quantities that transfer to TPU: FLOPs, bytes
 touched, arithmetic intensity, and correctness vs the oracle.
+
+Run as a script this also measures the autotuner's win on a heavy-tailed
+power-law graph — tuned sliced-ELL vs the single-width baseline, steady
+batched-fixpoint qps — and writes ``BENCH_kernels.json``:
+
+  PYTHONPATH=src python benchmarks/bench_kernels.py [--smoke] [--out F]
 """
 from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -13,7 +24,10 @@ import numpy as np
 
 from repro.kernels import ops, ref
 
-from .common import emit, time_call
+try:  # script mode (python benchmarks/bench_kernels.py) has no package parent
+    from .common import emit, time_call
+except ImportError:
+    from common import emit, time_call
 
 
 def main() -> list[str]:
@@ -61,5 +75,80 @@ def main() -> list[str]:
     return out
 
 
+# -- autotuned sliced-ELL vs single-width (ROADMAP item 6) -------------------
+
+
+def _steady_qps(csr, srcs, spmv, repeats: int) -> float:
+    """Warm steady-state queries/second of the batched CSR fixpoint."""
+    from repro.core import sparse
+    init = sparse.rows_from_sources(csr, srcs)
+    jax.block_until_ready(
+        sparse.fixpoint_csr_cached(csr, init, spmv=spmv).table)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        jax.block_until_ready(
+            sparse.fixpoint_csr_cached(csr, init, spmv=spmv).table)
+    return len(srcs) * repeats / (time.perf_counter() - t0)
+
+
+def bench_tuning(smoke: bool) -> dict:
+    """Tuned-vs-untuned steady qps on a heavy-tailed power-law graph.
+
+    The untuned side is the pinned single-width legacy layout
+    (``autotune.SINGLE_WIDTH``); the tuned side is whatever the measured
+    search picks for this graph's shape class.
+    """
+    from repro.core import sparse
+    from repro.data.graphs import powerlaw_graph
+    from repro.kernels import autotune as at
+
+    n, m, batch, repeats = (512, 3000, 8, 3) if smoke else (4096, 40000, 16, 5)
+    edges = powerlaw_graph(n, m, alpha=1.5, seed=13)
+    srcs = np.arange(batch, dtype=np.int64).tolist()
+    at.clear_cache()
+    res = at.autotune(edges, n, "bool", batch=batch)
+    spmv = ops.csr_frontier_step("bool") if res.config.use_kernel else None
+
+    base_csr = at.build_tuned(edges, n, "bool", at.SINGLE_WIDTH)
+    tuned_csr = at.build_tuned(edges, n, "bool", res.config)
+    untuned_qps = _steady_qps(base_csr, srcs, None, repeats)
+    tuned_qps = _steady_qps(tuned_csr, srcs, spmv, repeats)
+
+    rec = {
+        "graph": f"powerlaw-n{n}-m{len(edges)}-a1.5", "smoke": smoke,
+        "batch": batch, "backend": jax.default_backend(),
+        "untuned": {"config": at.SINGLE_WIDTH.as_dict(),
+                    "steady_qps": untuned_qps,
+                    "e_alloc": base_csr.e_alloc,
+                    "waste": base_csr.padding_waste()["waste"]},
+        "tuned": {"config": res.config.as_dict(), "steady_qps": tuned_qps,
+                  "e_alloc": tuned_csr.e_alloc,
+                  "waste": tuned_csr.padding_waste()["waste"],
+                  "frac_peak_flops": res.frac_peak_flops,
+                  "frac_peak_bw": res.frac_peak_bw,
+                  "search_gain": res.gain},
+        "tuned_over_untuned": tuned_qps / untuned_qps,
+    }
+    print(f"{rec['graph']}: untuned {untuned_qps:.1f} qps "
+          f"(waste {rec['untuned']['waste']:.1f}x), tuned {tuned_qps:.1f} qps "
+          f"(waste {rec['tuned']['waste']:.2f}x, cfg {res.config.as_dict()}) "
+          f"-> {rec['tuned_over_untuned']:.2f}x", flush=True)
+    assert rec["tuned_over_untuned"] >= 1.0, \
+        "tuned layout must not regress steady qps on a heavy-tail graph"
+    return rec
+
+
+def _cli():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    rec = bench_tuning(args.smoke)
+    out = Path(args.out) if args.out else \
+        Path(__file__).parent / "BENCH_kernels.json"
+    out.write_text(json.dumps(rec, indent=2))
+    print(f"wrote {out}")
+
+
 if __name__ == "__main__":
-    main()
+    _cli()

@@ -20,7 +20,7 @@ MODULES = [
     "repro.service.admission",
     "repro.obs", "repro.obs.trace", "repro.obs.metrics",
     "repro.obs.fixpoint_probe", "repro.obs.roofline_attr",
-    "repro.kernels", "repro.data.graphs",
+    "repro.kernels", "repro.kernels.autotune", "repro.data.graphs",
 ]
 for m in MODULES:
     importlib.import_module(m)
@@ -42,6 +42,18 @@ if python -c "import hypothesis" 2>/dev/null; then
 fi
 DIFF_SEED=0 DIFF_CASES="${DIFF_CASES:-16}" \
     python -m pytest -q tests/test_differential.py ${HYPOTHESIS_FLAGS}
+
+echo "== kernel tuning smoke bench (tuned >= untuned steady qps + JSON parses) =="
+python benchmarks/bench_kernels.py --smoke --out /tmp/BENCH_kernels.json
+python - <<'EOF'
+import json
+
+rec = json.load(open("/tmp/BENCH_kernels.json"))
+assert rec["tuned"]["steady_qps"] >= rec["untuned"]["steady_qps"], rec
+assert rec["tuned"]["waste"] <= rec["untuned"]["waste"], rec
+print(f"tuned/untuned = {rec['tuned_over_untuned']:.2f}x "
+      f"(waste {rec['untuned']['waste']:.1f}x -> {rec['tuned']['waste']:.2f}x)")
+EOF
 
 echo "== serving smoke bench (incl. tuple-batch + trace-count assert) =="
 python benchmarks/bench_serve.py --smoke

@@ -459,6 +459,7 @@ class Engine:
         sparse: bool | None = None,
         sparse_threshold: float | None = None,
         bucket_floors: dict[str, int] | None = None,
+        tune=None,
     ):
         if isinstance(program, str):
             program = parse_program(program, constants=constants)
@@ -488,7 +489,8 @@ class Engine:
             program, PlanOptions(
                 query=qlit, batch=blits, magic=magic, sparse=sparse,
                 sparse_threshold=sparse_threshold,
-                bucket_floors=tuple(sorted((bucket_floors or {}).items()))))
+                bucket_floors=tuple(sorted((bucket_floors or {}).items())),
+                tune=tune))
         # groups/facts reference the post-pass (possibly magic-rewritten) rules
         self.program = self.plan.rewritten
         self.bits = bits
@@ -630,7 +632,16 @@ class Engine:
         if probe:  # local import keeps core import-independent of obs
             from ..obs import fixpoint_probe as _probe
         if use_csr:
-            csr = _sparse.build_csr(edges, n, low.kind)
+            if opts.tune:  # local import keeps core import-light
+                from ..kernels import autotune as _at
+                cfg = (opts.tune if isinstance(opts.tune, _at.KernelConfig)
+                       else _at.autotune(edges, n, low.kind).config)
+                csr = _at.build_tuned(edges, n, low.kind, cfg)
+                if csr.plan_cfg is not None and spmv is None:
+                    from ..kernels import ops as _kops
+                    spmv = _kops.csr_frontier_step(low.kind)
+            else:
+                csr = _sparse.build_csr(edges, n, low.kind)
             init = _sparse.rows_from_sources(csr, [src])
             if probe:
                 res, pr = _probe.fixpoint_csr_probed(csr, init, spmv=spmv)
@@ -763,7 +774,7 @@ class Engine:
         """Representation/bucketing options to thread into sub-engines."""
         opts = self.plan.options
         return dict(sparse=opts.sparse, sparse_threshold=opts.sparse_threshold,
-                    bucket_floors=dict(opts.bucket_floors))
+                    bucket_floors=dict(opts.bucket_floors), tune=opts.tune)
 
     def _query_engine(self, q: Literal, caps=None, default_cap=None,
                       join_cap=None) -> "Engine":

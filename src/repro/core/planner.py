@@ -152,6 +152,11 @@ class PlanOptions:
                   hovers around a bucket boundary pin a floor so warm
                   queries never straddle two compiled shapes (see
                   ``benchmarks/bench_buckets.py`` for how to pick them).
+    ``tune``    — kernel tuning for CSR-lowered fixpoints
+                  (``kernels.autotune``): ``True`` = roofline-steered
+                  measured search at CSR build time (cached per graph-shape
+                  signature), a pinned ``KernelConfig`` applies without
+                  measuring, ``None`` (default) = library layout.
     """
 
     query: Literal | None = None
@@ -161,6 +166,7 @@ class PlanOptions:
     sparse: bool | None = None
     sparse_threshold: float | None = None
     bucket_floors: tuple[tuple[str, int], ...] = ()
+    tune: object = None  # bool | kernels.autotune.KernelConfig (hashable)
 
 
 @dataclasses.dataclass

@@ -295,6 +295,20 @@ def quantize_rows(n: int, minimum: int = 8) -> int:
     return 1 << (n - 1).bit_length()
 
 
+def quantize_ladder(floor: int, stride: int, top: int) -> tuple[int, ...]:
+    """Geometric capacity ladder for degree-class slices: power-of-two caps
+    ``floor, floor<<stride, ...`` until the last rung covers ``top``.
+    ``stride == 0`` degenerates to one rung at ``quantize_rows(top)`` — the
+    single-width (legacy ELL) layout."""
+    base = quantize_rows(max(int(floor), 1), minimum=1)
+    if stride <= 0:
+        return (quantize_rows(max(int(top), 1), minimum=base),)
+    caps = [base]
+    while caps[-1] < top:
+        caps.append(caps[-1] << stride)
+    return tuple(caps)
+
+
 def pack_warm_rows(rows: np.ndarray, vals: np.ndarray | None, schema: Schema,
                    agg_init: int | None = None):
     """Pack previously-materialized rows for *warm-starting* a later fixpoint.

@@ -19,27 +19,41 @@ Layout (:class:`CSRMatrix`):
   sorted by source, ``row_ptr[v]:row_ptr[v+1]`` spans v's out-edges), plus
   ``src_idx`` — the expanded row ids (CSR-packed COO) that make the edge
   gather one vectorized operation instead of a per-row loop;
-* ``ell_idx`` — the **degree-bucketed** segment index: for every
-  destination vertex, the packed positions of its in-edges, padded to the
-  bucketed max in-degree (``deg_cap``).  XLA lane scatter serializes per
-  index, so the segment-⊕ instead runs as a gather + (B, n, deg_cap)
-  ⊕-reduce — scatter-free, fully data-parallel (the Gilray et al. layout);
+* ``ell_slices``/``ell_rank`` — the **sliced-ELL** segment index: vertices
+  partition into degree classes (capacity ladder ``floor·(2^stride)^i``,
+  see :func:`~repro.core.seminaive.quantize_ladder`) and each slice packs
+  its vertices' in-edge positions at *its own* capacity.  XLA lane scatter
+  serializes per index, so the segment-⊕ instead runs scatter-free: one
+  gather + (B, rows_s, cap_s) ⊕-reduce per slice, concatenated and
+  lane-gathered back to vertex order through ``ell_rank``.  A single-width
+  ELL pads every vertex to the max in-degree — one power-law hub inflates
+  ``e_alloc`` for the whole spine; slicing bounds padding per degree class
+  (a vertex in a stride-1 slice has indeg > cap/2, so spine allocation stays
+  ≤ ~2·|E| regardless of the tail).  ``ell_cfg=(floor, 0)`` degenerates to
+  the legacy single-width layout;
 * ``nnz`` padded to a :func:`~repro.core.seminaive.quantize_rows` bucket
-  with ⊕-zero sentinel arcs (``ell_idx`` pads point at a sentinel slot) —
+  with ⊕-zero sentinel arcs (slice pads point at a sentinel slot) —
   warm graphs whose edge counts and degree profiles stay inside their
   buckets reuse compiled fixpoints, the serving layer's shape-stability
   contract;
+* an optional **tile-skip plan** (``plan_tile``/``plan_chunk``/
+  ``plan_first`` + static ``plan_cfg``): the host-precomputed worklist of
+  (column-tile, edge-chunk) pairs with at least one destination hit, ridden
+  into the Pallas min-plus kernel as scalar-prefetch operands so its grid
+  visits O(hits) blocks instead of the dense O(cap·n/(chunk·bn)) cross
+  product (``kernels.spmv.csr_minplus_spmv_tiled``);
 * a COO **tail** for monotone appends: new arcs land in a bucketed tail
-  (with its own small ELL index — one extra segment pass per iteration) and
-  fold into the CSR spine only when the tail outgrows ``rebuild_frac`` of
-  the packed arcs — appends stay O(|ΔE|) instead of re-sorting the world.
+  (with its own small single-width ELL index — one extra segment pass per
+  iteration) and fold into the CSR spine only when the tail outgrows
+  ``rebuild_frac`` of the packed arcs — appends stay O(|ΔE|) instead of
+  re-sorting the world.  Rebuilds carry ``ell_cfg``/``plan_cfg`` forward.
 
 ``fixpoint_csr`` / ``fixpoint_csr_cached`` mirror ``fixpoint_dense`` /
 ``fixpoint_dense_cached`` (same :class:`~repro.core.seminaive.DenseResult`,
 same per-row convergence masking, same shape-keyed jit) so the serving stack
 swaps representations behind one batching interface.  The Pallas kernels in
 ``repro.kernels.spmv`` implement the same segment-semiring contraction with
-explicit tiling; the jnp gather/scatter here is the oracle and CPU path.
+explicit tiling; the jnp gather/reduce here is the oracle and CPU path.
 """
 from __future__ import annotations
 
@@ -52,12 +66,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from .semiring import BOOL, MIN_PLUS, Semiring
-from .seminaive import DenseResult, _ne, bump_trace_count, quantize_rows
+from .seminaive import (DenseResult, _ne, bump_trace_count, quantize_ladder,
+                        quantize_rows)
 
 #: density |E|/n² below which the serving layer prefers CSR over the dense
 #: matrix (the auto heuristic; PlanOptions.sparse / DatalogService(sparse=)
 #: force either).  Above it the dense ⊕.⊗ product's regular layout wins.
 DEFAULT_SPARSE_THRESHOLD = 1 / 64
+
+#: default sliced-ELL capacity ladder: floor 1, stride 1 — pure power-of-two
+#: degree classes (caps 1, 2, 4, ...).  ``(f, 0)`` is single-width legacy.
+DEFAULT_ELL_CFG = (1, 1)
 
 
 def prefer_csr(nnz: int, n: int, threshold: float = DEFAULT_SPARSE_THRESHOLD) -> bool:
@@ -73,10 +92,11 @@ def _semiring_of(kind: str) -> Semiring:
 
 @functools.partial(
     jax.tree_util.register_dataclass,
-    data_fields=("row_ptr", "col_idx", "edge_val", "src_idx", "ell_idx",
-                 "nnz", "tail_src", "tail_dst", "tail_val", "tail_ell",
-                 "tail_nnz"),
-    meta_fields=("n", "n_alloc", "kind", "deg_cap"),
+    data_fields=("row_ptr", "col_idx", "edge_val", "src_idx", "ell_slices",
+                 "ell_rank", "nnz", "tail_src", "tail_dst", "tail_val",
+                 "tail_ell", "tail_nnz", "plan_tile", "plan_chunk",
+                 "plan_first"),
+    meta_fields=("n", "n_alloc", "kind", "ell_cfg", "plan_cfg"),
 )
 @dataclasses.dataclass(frozen=True)
 class CSRMatrix:
@@ -91,22 +111,30 @@ class CSRMatrix:
     col_idx: jax.Array  # (cap,) int32 — destinations, source-sorted
     edge_val: jax.Array  # (cap,) carrier — True / weight; ⊕-zero sentinels
     src_idx: jax.Array  # (cap,) int32 — expanded row ids (packed COO)
-    ell_idx: jax.Array  # (n_alloc, deg_cap) int32 — per-destination packed
-    #                     positions of its in-edges (degree-bucketed,
-    #                     sentinel-slot padded): the scatter-free segment map
+    ell_slices: tuple  # per-degree-class (rows_s, cap_s) int32 tables of
+    #                    packed in-edge positions (sentinel-slot padded):
+    #                    the scatter-free sliced segment map
+    ell_rank: jax.Array  # (n_alloc,) int32 — vertex -> its row in the
+    #                      slice-concatenated reduce output (dead vertices
+    #                      share the all-sentinel row 0)
     nnz: jax.Array  # () int32 — live arcs in the CSR spine
     tail_src: jax.Array  # (tail_cap,) int32 — appended arcs (COO tail)
     tail_dst: jax.Array  # (tail_cap,) int32
     tail_val: jax.Array  # (tail_cap,) carrier
     tail_ell: jax.Array  # (n_alloc, tail_deg_cap) int32 — tail segment map
     tail_nnz: jax.Array  # () int32
+    plan_tile: jax.Array | None  # (W,) int32 tile-skip worklist (see module
+    plan_chunk: jax.Array | None  # doc); None when no kernel plan was built
+    plan_first: jax.Array | None  # (W,) int32 — 1 at a tile's first visit
     n: int  # live domain size AT BUILD TIME — static metadata (part of the
     #         jit cache key), so tail appends never touch it: the serving
     #         layer tracks live growth itself and the segment maps cover all
     #         of n_alloc regardless
     n_alloc: int  # padded domain (dense twin's n_align contract)
     kind: str  # 'bool' | 'minplus'
-    deg_cap: int  # max in-degree, quantize_rows-bucketed (the ELL width)
+    ell_cfg: tuple  # (floor, stride) capacity-ladder config; stride 0 =
+    #                 single-width (legacy) ELL
+    plan_cfg: tuple | None  # (chunk, bn) of the tile-skip plan, or None
 
     @property
     def semiring(self) -> Semiring:
@@ -120,10 +148,41 @@ class CSRMatrix:
     def tail_capacity(self) -> int:
         return int(self.tail_src.shape[0])
 
+    @property
+    def deg_cap(self) -> int:
+        """Widest slice capacity (the single-width ELL width when stride=0)."""
+        return max(int(t.shape[1]) for t in self.ell_slices)
+
+    @property
+    def e_alloc(self) -> int:
+        """Allocated segment-reduce slots (sliced spine + tail): the ELL
+        padding overhead the roofline attribution charges per iteration."""
+        spine = sum(int(t.shape[0]) * int(t.shape[1]) for t in self.ell_slices)
+        return spine + int(np.prod(self.tail_ell.shape))
+
     def density(self) -> float:
         if self.n <= 0:
             return 0.0
         return float(int(self.nnz) + int(self.tail_nnz)) / float(self.n * self.n)
+
+    def padding_waste(self) -> dict:
+        """Per-slice allocation report: how much of the sliced spine is pad.
+
+        ``waste`` is ``e_alloc_spine / max(nnz, 1)`` — the sliced-ELL win
+        over single-width shows up here (``benchmarks/bench_buckets.py``
+        records it; the serving layer surfaces it through ``explain()``).
+        """
+        sent = self.capacity - 1
+        slices = []
+        for t in self.ell_slices:
+            tn = np.asarray(t)
+            live = int((tn != sent).sum())
+            slices.append({"rows": int(t.shape[0]), "cap": int(t.shape[1]),
+                           "alloc": int(tn.size), "live": live})
+        alloc = sum(s["alloc"] for s in slices)
+        nnz = int(self.nnz)
+        return {"slices": slices, "e_alloc": alloc, "nnz": nnz,
+                "waste": alloc / max(nnz, 1)}
 
     def edges_numpy(self) -> np.ndarray:
         """The live arcs back as an (m, 2|3) int64 edge list (spine + tail)."""
@@ -158,12 +217,9 @@ def _pack_edges(edges: np.ndarray, kind: str):
 
 def _ell_index(dst: np.ndarray, m: int, n_alloc: int,
                sentinel_pos: int) -> np.ndarray:
-    """The scatter-free segment map: for every destination vertex, the
-    packed positions of its in-edges, right-padded with ``sentinel_pos`` (a
-    slot whose value is the ⊕-zero) to the *degree bucket* — the max
-    in-degree rounded up by :func:`quantize_rows`, so degree growth inside
-    the bucket keeps compiled shapes stable.
-    """
+    """Single-width segment map (the COO tail's layout): for every vertex,
+    the packed positions of its in-edges, right-padded with ``sentinel_pos``
+    (a slot whose value is the ⊕-zero) to the bucketed max in-degree."""
     live = dst[:m]
     indeg = np.bincount(live, minlength=n_alloc) if m else \
         np.zeros(n_alloc, np.int64)
@@ -178,16 +234,112 @@ def _ell_index(dst: np.ndarray, m: int, n_alloc: int,
     return ell
 
 
+def _sliced_ell_index(dst: np.ndarray, m: int, n_alloc: int,
+                      sentinel_pos: int, ell_cfg: tuple):
+    """The sliced-ELL segment map: ``(slices, rank)``.
+
+    Vertices with in-degree in ``(caps[s-1], caps[s]]`` land in slice ``s``
+    (ladder from :func:`quantize_ladder`); each slice is a
+    ``(rows_s, caps[s])`` table of packed in-edge positions, sentinel-padded.
+    Row counts are EXACT and empty rungs are dropped — rounding rows up (or
+    keeping an all-pad hub slice at 8 rows) voids the per-slice padding
+    bound that is the whole point; the price is a retrace when a rebuild
+    shifts the degree profile, which a rebuild pays anyway when its edge
+    bucket moves.  The first kept slice's row 0 is a shared all-sentinel
+    row: every zero-in-degree vertex's ``rank`` points there, so dead
+    vertices cost one row total instead of one row each (the single-width
+    layout's other hidden pad).
+    """
+    floor, stride = ell_cfg
+    live = dst[:m]
+    indeg = np.bincount(live, minlength=n_alloc) if m else \
+        np.zeros(n_alloc, np.int64)
+    max_d = int(indeg.max()) if m else 0
+    caps = np.asarray(quantize_ladder(floor, stride, max_d), np.int64)
+    live_v = np.nonzero(indeg > 0)[0]
+    # first ladder rung covering each live vertex's in-degree
+    slice_of = np.searchsorted(caps, indeg[live_v], side="left")
+    rank = np.zeros(n_alloc, np.int32)  # dead vertices -> shared row 0
+    tables = []
+    if m:
+        order = np.argsort(live, kind="stable")
+        sorted_dst = live[order]
+        starts = np.cumsum(indeg) - indeg
+        edge_rank = np.arange(m) - starts[sorted_dst]
+        edge_slice = np.searchsorted(caps, indeg[sorted_dst], side="left")
+    row_of = np.zeros(n_alloc, np.int64)
+    off = 0
+    for s, cap in enumerate(caps):
+        vs = live_v[slice_of == s]
+        base = 1 if not tables else 0  # the shared sentinel row
+        if not len(vs) and not base:
+            continue  # empty rung: no table at all
+        rows = len(vs) + base
+        tbl = np.full((rows, int(cap)), sentinel_pos, np.int32)
+        row_of[vs] = base + np.arange(len(vs))
+        rank[vs] = off + base + np.arange(len(vs))
+        if m:
+            me = edge_slice == s
+            tbl[row_of[sorted_dst[me]], edge_rank[me]] = order[me]
+        tables.append(tbl)
+        off += rows
+    return tuple(tables), rank
+
+
+def _tile_plan(dst: np.ndarray, m: int, cap: int, n_alloc: int,
+               chunk: int, bn: int):
+    """Host-side tile-skip worklist for the Pallas min-plus kernel: the
+    (column-tile, edge-chunk) pairs where at least one live arc's destination
+    lands in the tile, sorted by tile (output blocks must be revisited
+    contiguously), each tile's first visit flagged for the ⊕-identity init.
+
+    Empty tiles keep one dummy (tile, chunk 0) item so the init still fires
+    (a chunk with no hits contributes only masked-out +inf).  The list pads
+    to a :func:`quantize_rows` bucket by repeating the last item — safe
+    because ⊕ is idempotent — so warm graphs reuse compiled grids.
+    """
+    w = max(128, bn)  # the kernel wrapper's padded frontier width
+    n_pad = ((max(n_alloc, 1) + w - 1) // w) * w
+    nt, nchunks = n_pad // bn, cap // chunk
+    hits = np.zeros((nt, nchunks), bool)
+    if m:
+        hits[dst[:m] // bn, np.arange(m) // chunk] = True
+    tiles, chunks, first = [], [], []
+    for t in range(nt):
+        cs = np.nonzero(hits[t])[0]
+        if len(cs) == 0:
+            cs = np.zeros(1, np.int64)
+        tiles.extend([t] * len(cs))
+        chunks.extend(cs.tolist())
+        first.extend([1] + [0] * (len(cs) - 1))
+    pad = quantize_rows(len(tiles), minimum=8) - len(tiles)
+    tiles += [tiles[-1]] * pad
+    chunks += [chunks[-1]] * pad
+    first += [0] * pad
+    return (np.asarray(tiles, np.int32), np.asarray(chunks, np.int32),
+            np.asarray(first, np.int32))
+
+
+def _pow2_floor(x: int) -> int:
+    return 1 << (max(int(x), 1).bit_length() - 1)
+
+
 def build_csr(edges: np.ndarray, n_alloc: int, kind: str = "bool",
-              tail_min: int = 8) -> CSRMatrix:
+              tail_min: int = 8, ell_cfg: tuple = DEFAULT_ELL_CFG,
+              kernel_plan: tuple | None = None) -> CSRMatrix:
     """Pack an edge list into a :class:`CSRMatrix` over ``n_alloc`` vertices.
 
     Arcs sort by (src, dst); ``nnz`` pads to a power-of-two bucket (always
     leaving at least one slot free) with sentinel arcs whose ``edge_val`` is
     the ⊕-zero (False / +inf) so they can never contribute — the sparse twin
-    of ``build_edb_index``'s EMPTY pad.  ``ell_idx`` pad entries point at
-    the last sentinel slot.  Duplicate arcs need no dedup: both carriers' ⊕
-    is idempotent.
+    of ``build_edb_index``'s EMPTY pad.  Slice pad entries point at the last
+    sentinel slot.  Duplicate arcs need no dedup: both carriers' ⊕ is
+    idempotent.
+
+    ``ell_cfg=(floor, stride)`` sets the sliced-ELL capacity ladder
+    (``stride=0`` = single-width legacy); ``kernel_plan=(chunk, bn)`` also
+    precomputes the Pallas tile-skip worklist for those block sizes (the
+    autotuner's knobs — see ``kernels.autotune``).
     """
     src, dst, val = _pack_edges(edges, kind)
     m = len(src)
@@ -202,20 +354,32 @@ def build_csr(edges: np.ndarray, n_alloc: int, kind: str = "bool",
     cap = quantize_rows(m + 1)  # >= 1 sentinel slot for the ELL pads
     sr = _semiring_of(kind)
     pad = cap - m
-    ell = _ell_index(dst, m, n_alloc, cap - 1)
+    slices, rank = _sliced_ell_index(dst, m, n_alloc, cap - 1, tuple(ell_cfg))
+    plan_cfg = plan = None
+    if kernel_plan is not None:
+        chunk, bn = kernel_plan
+        chunk = min(_pow2_floor(chunk), cap)  # cap is a power of two
+        bn = _pow2_floor(bn)
+        plan = _tile_plan(dst, m, cap, n_alloc, chunk, bn)
+        plan_cfg = (chunk, bn)
     src = np.concatenate([src, np.zeros(pad, np.int32)])
     dst = np.concatenate([dst, np.zeros(pad, np.int32)])
     val = np.concatenate([val, np.full(pad, sr.zero, val.dtype)])
     return CSRMatrix(
         row_ptr=jnp.asarray(row_ptr), col_idx=jnp.asarray(dst),
         edge_val=jnp.asarray(val), src_idx=jnp.asarray(src),
-        ell_idx=jnp.asarray(ell), nnz=jnp.asarray(m, jnp.int32),
+        ell_slices=tuple(jnp.asarray(t) for t in slices),
+        ell_rank=jnp.asarray(rank), nnz=jnp.asarray(m, jnp.int32),
         tail_src=jnp.zeros(tail_min, jnp.int32),
         tail_dst=jnp.zeros(tail_min, jnp.int32),
         tail_val=jnp.full(tail_min, sr.zero, val.dtype),
         tail_ell=jnp.full((n_alloc, 1), tail_min - 1, jnp.int32),
         tail_nnz=jnp.asarray(0, jnp.int32),
-        n=n, n_alloc=n_alloc, kind=kind, deg_cap=ell.shape[1])
+        plan_tile=None if plan is None else jnp.asarray(plan[0]),
+        plan_chunk=None if plan is None else jnp.asarray(plan[1]),
+        plan_first=None if plan is None else jnp.asarray(plan[2]),
+        n=n, n_alloc=n_alloc, kind=kind, ell_cfg=tuple(ell_cfg),
+        plan_cfg=plan_cfg)
 
 
 def tail_will_rebuild(csr: CSRMatrix, n_new: int,
@@ -237,7 +401,9 @@ def csr_append(csr: CSRMatrix, rows: np.ndarray,
                rebuild_frac: float = 0.25) -> CSRMatrix:
     """Monotone append: new arcs land in the COO tail; the CSR spine only
     rebuilds (re-sort + repack) when the tail outgrows ``rebuild_frac`` of
-    the packed arcs, so the steady-state append is O(|ΔE|).
+    the packed arcs, so the steady-state append is O(|ΔE|).  A rebuild
+    carries the sliced-ELL config and tile-skip plan sizes forward (the
+    autotuner's choices survive tail folds).
 
     Arcs must stay inside ``n_alloc`` — domain growth is the caller's rebuild
     (the serving layer re-allocates exactly like its dense twin).
@@ -250,7 +416,8 @@ def csr_append(csr: CSRMatrix, rows: np.ndarray,
     if tail_will_rebuild(csr, len(src), rebuild_frac):
         merged = np.concatenate([csr.edges_numpy(),
                                  np.asarray(rows, np.int64).reshape(len(src), -1)])
-        return build_csr(merged, csr.n_alloc, csr.kind)
+        return build_csr(merged, csr.n_alloc, csr.kind, ell_cfg=csr.ell_cfg,
+                         kernel_plan=csr.plan_cfg)
     cap = quantize_rows(total_tail + 1)  # >= 1 sentinel slot for the ELL pads
     sr = csr.semiring
     tsrc = np.full(cap, 0, np.int32)
@@ -273,9 +440,10 @@ def csr_append(csr: CSRMatrix, rows: np.ndarray,
 # XLA lowers a lane scatter to a serialized per-index loop on CPU — the one
 # formulation that would hand the O(|E|) advantage straight back.  The steps
 # therefore run scatter-FREE: gather every arc's source value, then ⊕-reduce
-# each destination's in-edge positions through the degree-bucketed ``ell``
-# map.  Work is O(B·(|E| + n·deg_cap)); every op is a dense gather/reduce
-# the compiler vectorizes.
+# each slice's in-edge positions at the slice's own capacity, concatenate,
+# and lane-gather back to vertex order through ``ell_rank``.  Work is
+# O(B·(|E| + e_alloc)); every op is a dense gather/reduce the compiler
+# vectorizes, and e_alloc tracks |E| instead of n·max_indeg.
 
 
 def _ell_step_or(f: jax.Array, src, val, ell) -> jax.Array:
@@ -288,15 +456,28 @@ def _ell_step_min(f: jax.Array, src, val, ell) -> jax.Array:
     return jnp.min(contrib[:, ell], axis=2)
 
 
+def _sliced_step_or(f: jax.Array, src, val, slices, rank) -> jax.Array:
+    contrib = f[:, src] & val
+    parts = [jnp.any(contrib[:, t], axis=2) for t in slices]
+    return jnp.concatenate(parts, axis=1)[:, rank]
+
+
+def _sliced_step_min(f: jax.Array, src, val, slices, rank) -> jax.Array:
+    contrib = f[:, src] + val
+    parts = [jnp.min(contrib[:, t], axis=2) for t in slices]
+    return jnp.concatenate(parts, axis=1)[:, rank]
+
+
 def csr_frontier_or(frontier: jax.Array, csr: CSRMatrix) -> jax.Array:
     """One boolean frontier step over the packed arcs: O(B·|E|).
 
     ``frontier``: (B, n_alloc) bool (or (n_alloc,) — promoted).  Sentinel
     arcs carry ``val=False`` and never fire; the COO tail contributes a
-    second segment pass.
+    second (single-width) segment pass.
     """
     f = frontier[None, :] if frontier.ndim == 1 else frontier
-    out = _ell_step_or(f, csr.src_idx, csr.edge_val, csr.ell_idx)
+    out = _sliced_step_or(f, csr.src_idx, csr.edge_val, csr.ell_slices,
+                          csr.ell_rank)
     out = out | _ell_step_or(f, csr.tail_src, csr.tail_val, csr.tail_ell)
     return out[0] if frontier.ndim == 1 else out
 
@@ -304,7 +485,8 @@ def csr_frontier_or(frontier: jax.Array, csr: CSRMatrix) -> jax.Array:
 def csr_frontier_min(frontier: jax.Array, csr: CSRMatrix) -> jax.Array:
     """One min-plus frontier step over the packed arcs (sentinels are +inf)."""
     f = frontier[None, :] if frontier.ndim == 1 else frontier
-    out = _ell_step_min(f, csr.src_idx, csr.edge_val, csr.ell_idx)
+    out = _sliced_step_min(f, csr.src_idx, csr.edge_val, csr.ell_slices,
+                           csr.ell_rank)
     out = jnp.minimum(
         out, _ell_step_min(f, csr.tail_src, csr.tail_val, csr.tail_ell))
     return out[0] if frontier.ndim == 1 else out
@@ -381,9 +563,10 @@ def fixpoint_csr_cached(csr: CSRMatrix, init: jax.Array,
                         spmv: Callable | None = None,
                         max_iters: int | None = None) -> DenseResult:
     """:func:`fixpoint_csr` under a shape-keyed jit (twin of
-    ``fixpoint_dense_cached``): the CSR's bucketed capacities and the padded
-    batch shape are the key, so warm serving batches skip re-tracing.
-    ``spmv`` must be a module-level callable for a stable cache key."""
+    ``fixpoint_dense_cached``): the CSR's bucketed capacities (slice shapes
+    included) and the padded batch shape are the key, so warm serving
+    batches skip re-tracing.  ``spmv`` must be a module-level callable for a
+    stable cache key."""
     if max_iters is None:
         max_iters = 4 * init.shape[-1] + 8
     return _fixpoint_csr_jit(csr, init, spmv, max_iters)

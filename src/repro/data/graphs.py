@@ -52,6 +52,30 @@ def gnp_graph(n: int, p: float = 0.001, seed: int = 0) -> np.ndarray:
     return np.stack([src, dst], axis=1).astype(np.int64)
 
 
+def powerlaw_graph(n: int, m: int, alpha: float = 1.5, seed: int = 0) -> np.ndarray:
+    """m-edge digraph whose IN-degrees follow a Zipf(alpha) law over n vertices.
+
+    Sources are uniform; destinations are drawn from a rank-based power law,
+    so a handful of hub vertices absorb most arcs — the heavy-tail regime
+    where single-width ELL pads every row to the hub's capacity and the
+    sliced-ELL ladder (``core.sparse``) is designed to win.  Duplicate arcs
+    and self-loops are dropped, so the result can land under ``m`` edges.
+    """
+    rng = np.random.default_rng(seed)
+    weights = 1.0 / np.arange(1, n + 1, dtype=np.float64) ** alpha
+    weights /= weights.sum()
+    # oversample, then dedup: keeps the degree law while returning ~m arcs
+    k = int(m * 1.5) + 8
+    src = rng.integers(0, n, k)
+    dst = rng.choice(n, size=k, p=weights)
+    keep = src != dst
+    edges = np.unique(np.stack([src[keep], dst[keep]], axis=1), axis=0)
+    if len(edges) > m:
+        edges = edges[rng.permutation(len(edges))[:m]]
+    return np.ascontiguousarray(edges[np.lexsort((edges[:, 1], edges[:, 0]))],
+                                dtype=np.int64)
+
+
 def graph_to_adj(edges: np.ndarray, n: int | None = None) -> np.ndarray:
     n = n or int(edges.max()) + 1
     adj = np.zeros((n, n), bool)

@@ -17,7 +17,7 @@ from .flash_attention import flash_attention
 from .minplus import minplus_frontier_matmul, minplus_matmul
 from .relax import relax_step
 from .rglru_scan import rglru_scan
-from .spmv import csr_bool_spmv, csr_minplus_spmv
+from .spmv import csr_bool_spmv, csr_minplus_spmv, csr_minplus_spmv_tiled
 
 
 def auto_interpret() -> bool:
@@ -89,6 +89,13 @@ def csr_minplus(frontier, src, dst, val, **kw):
     return csr_minplus_spmv(frontier, src, dst, val, **kw)
 
 
+def csr_minplus_tiled(frontier, src, dst, val, plan_tile, plan_chunk,
+                      plan_first, **kw):
+    kw.setdefault("interpret", auto_interpret())
+    return csr_minplus_spmv_tiled(frontier, src, dst, val, plan_tile,
+                                  plan_chunk, plan_first, **kw)
+
+
 def _csr_bool_step(frontier, csr):
     """Kernel-backed sparse frontier step (spine + COO tail); drop-in for
     ``core.sparse.csr_frontier_or`` in ``fixpoint_csr(spmv=...)``."""
@@ -100,7 +107,16 @@ def _csr_bool_step(frontier, csr):
 
 def _csr_minplus_step(frontier, csr):
     f = frontier[None, :] if frontier.ndim == 1 else frontier
-    out = csr_minplus(f, csr.src_idx, csr.col_idx, csr.edge_val)
+    if csr.plan_cfg is not None:
+        # spine has a precomputed tile-skip plan (build_csr(kernel_plan=) /
+        # the autotuner): walk the O(hits) worklist instead of the dense grid
+        chunk, bn = csr.plan_cfg
+        out = csr_minplus_tiled(f, csr.src_idx, csr.col_idx, csr.edge_val,
+                                csr.plan_tile, csr.plan_chunk, csr.plan_first,
+                                chunk=chunk, bn=bn)
+    else:
+        out = csr_minplus(f, csr.src_idx, csr.col_idx, csr.edge_val)
+    # the COO tail is small and rebuilt per append — no plan, dense grid
     out = jnp.minimum(
         out, csr_minplus(f, csr.tail_src, csr.tail_dst, csr.tail_val))
     return out[0] if frontier.ndim == 1 else out

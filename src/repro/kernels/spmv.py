@@ -11,18 +11,34 @@ re-express the scatter as a structured contraction over an *edge chunk*:
 * **bool**: the chunk's destination one-hot ``H[e, j] = (dst_e == j)`` turns
   the segment-OR into ``contrib @ H`` — an f32 matmul on the MXU with a
   nonzero-threshold epilogue (the same trick ``boolmm`` uses for ∨.∧).
+  A per-chunk **activity bitmap** (does any live frontier row reach any of
+  the chunk's sources?) rides in as a scalar-prefetch operand and gates the
+  gather + matmul with ``pl.when`` — chunks whose sources are all ⊕-zero in
+  the frontier (the common case late in a converging fixpoint) skip their
+  MXU work entirely.  The bitmap is O(|E|) to compute vs the O(B·|E|·n_tile)
+  it can skip, and it is frontier-dependent, so it is computed on device
+  each step (a host-precomputed plan cannot see the frontier).
 * **min-plus**: no MXU path (min is not multiply-accumulate), so the
   segment-min runs on the VPU as a masked broadcast-min over (B, chunk, bn)
-  column tiles, chunk kept small so the broadcast stays in VMEM.
+  column tiles.  The naive grid visits every (column-tile, edge-chunk) pair
+  — O(cap·n) work even when a chunk's destinations touch one tile.
+  :func:`csr_minplus_spmv_tiled` instead walks a host-precomputed worklist
+  of the (tile, chunk) pairs with at least one destination hit
+  (``core.sparse._tile_plan``), carried in as scalar-prefetch operands whose
+  values drive the BlockSpec index maps — O(hits) blocks.  Work items are
+  tile-sorted (output blocks revisit contiguously) with a first-visit flag
+  for the +inf init; list padding repeats items, sound because min is
+  idempotent.
 
 Edges arrive pre-packed by ``core.sparse.build_csr``: capacity bucketed to a
 power of two (sentinel arcs carry the ⊕-zero and can never win), so the grid
-``cap // chunk`` is static per bucket and warm graphs reuse compiles.  The
-gather ``frontier[:, src]`` uses ``jnp.take`` along lanes — supported by the
-interpreter everywhere and by Mosaic's dynamic-gather lowering on current
-TPU generations; the one-hot contraction trades |E|·n_tile FLOPs for O(|E|)
-HBM traffic, which is the right trade on an MXU whose FLOPs are free
-relative to the dense path's O(n²) memory streams.
+is static per bucket and warm graphs reuse compiles.  Ad-hoc callers with
+unbucketed edges or domains get padded here — sentinel edges out of any
+chunk remainder, ⊕-zero columns out to the ``bn`` tile — instead of hitting
+an alignment assert: the serving path must never crash on an odd domain
+width.  The gather ``frontier[:, src]`` uses ``jnp.take`` along lanes —
+supported by the interpreter everywhere and by Mosaic's dynamic-gather
+lowering on current TPU generations.
 """
 from __future__ import annotations
 
@@ -38,30 +54,59 @@ DEFAULT_CHUNK_MINPLUS = 32  # keeps the (B, chunk, bn) broadcast small
 DEFAULT_BN = 128  # min-plus column tile (lane multiple)
 
 
-def _pad_frontier(frontier: jax.Array, zero) -> tuple[jax.Array, int, int]:
-    """Pad (B, n) to the f32 sublane/lane multiples with ⊕-zeros."""
+def _pow2_floor(x: int) -> int:
+    return 1 << (max(int(x), 1).bit_length() - 1)
+
+
+def padded_width(n: int, bn: int = 1) -> int:
+    """The frontier width the kernels actually see: ``n`` rounded up to the
+    f32 lane multiple AND the column-tile size (``bn`` is a power of two, so
+    one rounding to ``max(128, bn)`` covers both).  ``core.sparse`` builds
+    its tile-skip plans against this same width."""
+    w = max(128, bn)
+    return ((max(n, 1) + w - 1) // w) * w
+
+
+def _pad_frontier(frontier: jax.Array, zero, bn: int = 1):
+    """Pad (B, n) to sublane/lane/tile multiples with ⊕-zeros."""
     B, n = frontier.shape
-    pb, pn = (-B) % 8, (-n) % 128
+    pb, pn = (-B) % 8, padded_width(n, bn) - n
     if pb or pn:
         frontier = jnp.pad(frontier, ((0, pb), (0, pn)), constant_values=zero)
     return frontier, B, n
 
 
-def _bool_kernel(src_ref, dst_ref, val_ref, f_ref, o_ref, acc_ref):
+def _pad_edges(src, dst, val, chunk: int, zero):
+    """Round the packed-arc arrays up to a whole number of chunks with
+    sentinel edges (⊕-zero values never contribute) — the no-crash fix for
+    ad-hoc callers whose capacity is not chunk-aligned."""
+    cap = src.shape[0]
+    pad = (-cap) % chunk
+    if pad:
+        src = jnp.pad(src, (0, pad))
+        dst = jnp.pad(dst, (0, pad))
+        val = jnp.pad(val, (0, pad), constant_values=zero)
+    return src, dst, val
+
+
+def _bool_kernel(act_ref, src_ref, dst_ref, val_ref, f_ref, o_ref, acc_ref):
     c = pl.program_id(0)
 
     @pl.when(c == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    f = f_ref[...].astype(jnp.float32)  # (B, n)
-    contrib = jnp.take(f, src_ref[...], axis=1) * val_ref[...].astype(jnp.float32)
-    chunk = src_ref.shape[0]
-    n = f.shape[1]
-    onehot = (dst_ref[...][:, None]
-              == jax.lax.broadcasted_iota(jnp.int32, (chunk, n), 1))
-    acc_ref[...] += jnp.dot(contrib, onehot.astype(jnp.float32),
-                            preferred_element_type=jnp.float32)
+    @pl.when(act_ref[c] != 0)  # chunk-skip: no live source -> no MXU work
+    def _body():
+        f = f_ref[...].astype(jnp.float32)  # (B, n)
+        contrib = jnp.take(f, src_ref[...], axis=1) \
+            * val_ref[...].astype(jnp.float32)
+        chunk = src_ref.shape[0]
+        n = f.shape[1]
+        onehot = (dst_ref[...][:, None]
+                  == jax.lax.broadcasted_iota(jnp.int32, (chunk, n), 1))
+        acc_ref[...] += jnp.dot(contrib, onehot.astype(jnp.float32),
+                                preferred_element_type=jnp.float32)
 
     @pl.when(c == pl.num_programs(0) - 1)
     def _epilogue():
@@ -74,23 +119,32 @@ def csr_bool_spmv(frontier: jax.Array, src: jax.Array, dst: jax.Array,
                   interpret: bool = False) -> jax.Array:
     """(B, n) bool ⊗_bool packed arcs -> (B, n) bool (segment-OR by dst)."""
     f, B, n = _pad_frontier(frontier, False)
+    chunk = min(_pow2_floor(chunk), _pow2_floor(src.shape[0]))
+    src, dst, val = _pad_edges(src, dst, val, chunk, False)
     cap = src.shape[0]
-    chunk = min(chunk, cap)
-    assert cap % chunk == 0, (cap, chunk)
+    nchunks = cap // chunk
+    # per-chunk activity: does any live frontier row reach any chunk source?
+    active_src = jnp.any(f, axis=0)  # (n,) — pad rows are all-False
+    act = (jnp.take(active_src, src) & val).reshape(nchunks, chunk)
+    act = jnp.any(act, axis=1).astype(jnp.int32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nchunks,),
+        in_specs=[
+            pl.BlockSpec((chunk,), lambda c, act: (c,)),
+            pl.BlockSpec((chunk,), lambda c, act: (c,)),
+            pl.BlockSpec((chunk,), lambda c, act: (c,)),
+            pl.BlockSpec(f.shape, lambda c, act: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec(f.shape, lambda c, act: (0, 0)),
+        scratch_shapes=[pltpu.VMEM(f.shape, jnp.float32)],
+    )
     out = pl.pallas_call(
         _bool_kernel,
-        grid=(cap // chunk,),
-        in_specs=[
-            pl.BlockSpec((chunk,), lambda c: (c,)),
-            pl.BlockSpec((chunk,), lambda c: (c,)),
-            pl.BlockSpec((chunk,), lambda c: (c,)),
-            pl.BlockSpec(f.shape, lambda c: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec(f.shape, lambda c: (0, 0)),
+        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(f.shape, jnp.bool_),
-        scratch_shapes=[pltpu.VMEM(f.shape, jnp.float32)],
         interpret=interpret,
-    )(src, dst, val, f)
+    )(act, src, dst, val, f)
     return out[:B, :n]
 
 
@@ -117,11 +171,12 @@ def csr_minplus_spmv(frontier: jax.Array, src: jax.Array, dst: jax.Array,
                      val: jax.Array, *, chunk: int = DEFAULT_CHUNK_MINPLUS,
                      bn: int = DEFAULT_BN, interpret: bool = False) -> jax.Array:
     """(B, n) f32 ⊗_min,+ packed arcs -> (B, n) f32 (segment-min by dst)."""
-    f, B, n = _pad_frontier(frontier, jnp.inf)
-    cap = src.shape[0]
-    chunk = min(chunk, cap)
+    bn = _pow2_floor(bn)
+    f, B, n = _pad_frontier(frontier, jnp.inf, bn=bn)
     bn = min(bn, f.shape[1])
-    assert cap % chunk == 0 and f.shape[1] % bn == 0, (cap, chunk, f.shape, bn)
+    chunk = min(_pow2_floor(chunk), _pow2_floor(src.shape[0]))
+    src, dst, val = _pad_edges(src, dst, val, chunk, jnp.inf)
+    cap = src.shape[0]
     # grid: column tiles major, edge chunks minor — the output tile stays
     # resident in VMEM and ⊕-accumulates across the chunk steps
     out = pl.pallas_call(
@@ -137,4 +192,59 @@ def csr_minplus_spmv(frontier: jax.Array, src: jax.Array, dst: jax.Array,
         out_shape=jax.ShapeDtypeStruct(f.shape, jnp.float32),
         interpret=interpret,
     )(src, dst, val, f)
+    return out[:B, :n]
+
+
+def _minplus_tiled_kernel(tile_ref, chunk_ref, first_ref,
+                          src_ref, dst_ref, val_ref, f_ref, o_ref):
+    k = pl.program_id(0)
+
+    @pl.when(first_ref[k] == 1)  # first visit of this output tile
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, jnp.inf)
+
+    f = f_ref[...]  # (B, n)
+    contrib = jnp.take(f, src_ref[...], axis=1) + val_ref[...]  # (B, chunk)
+    chunk = src_ref.shape[0]
+    bn = o_ref.shape[1]
+    cols = (jax.lax.broadcasted_iota(jnp.int32, (chunk, bn), 1)
+            + tile_ref[k] * bn)
+    hit = dst_ref[...][:, None] == cols
+    cand = jnp.min(jnp.where(hit[None, :, :], contrib[:, :, None], jnp.inf),
+                   axis=1)
+    o_ref[...] = jnp.minimum(o_ref[...], cand)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "bn", "interpret"))
+def csr_minplus_spmv_tiled(frontier: jax.Array, src: jax.Array,
+                           dst: jax.Array, val: jax.Array,
+                           plan_tile: jax.Array, plan_chunk: jax.Array,
+                           plan_first: jax.Array, *, chunk: int, bn: int,
+                           interpret: bool = False) -> jax.Array:
+    """Tile-skipping min-plus SpMV: the grid walks the precomputed worklist
+    of (column-tile, edge-chunk) pairs with destination hits instead of the
+    dense cross product — O(hits) blocks.  The plan arrays ride in as
+    scalar-prefetch operands; their *values* drive the edge-chunk and output
+    BlockSpec index maps (``core.sparse._tile_plan`` builds them against
+    this wrapper's :func:`padded_width`)."""
+    f, B, n = _pad_frontier(frontier, jnp.inf, bn=bn)
+    assert src.shape[0] % chunk == 0 and f.shape[1] % bn == 0, \
+        "tile plan was built for a different packing — rebuild the CSR"
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(plan_tile.shape[0],),
+        in_specs=[
+            pl.BlockSpec((chunk,), lambda k, t, c, fi: (c[k],)),
+            pl.BlockSpec((chunk,), lambda k, t, c, fi: (c[k],)),
+            pl.BlockSpec((chunk,), lambda k, t, c, fi: (c[k],)),
+            pl.BlockSpec(f.shape, lambda k, t, c, fi: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((f.shape[0], bn), lambda k, t, c, fi: (0, t[k])),
+    )
+    out = pl.pallas_call(
+        _minplus_tiled_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(f.shape, jnp.float32),
+        interpret=interpret,
+    )(plan_tile, plan_chunk, plan_first, src, dst, val, f)
     return out[:B, :n]

@@ -30,7 +30,8 @@ from typing import Any, Dict, Optional
 
 from ..roofline.report import HW, V5E
 
-__all__ = ["KernelAttribution", "dense_launch_cost", "csr_launch_cost"]
+__all__ = ["KernelAttribution", "dense_launch_cost", "csr_launch_cost",
+           "predicted_seconds", "achieved_fractions"]
 
 
 def dense_launch_cost(B: int, n: int, itemsize: int, iters: int
@@ -53,6 +54,25 @@ def csr_launch_cost(B: int, n_alloc: int, e_alloc: int, itemsize: int,
         + itemsize * B * e_alloc            # gathered contributions
     )
     return {"flops": flops_per_iter * iters, "bytes": bytes_per_iter * iters}
+
+
+def predicted_seconds(cost: Dict[str, float], hw: HW = V5E) -> float:
+    """Roofline lower bound for an analytic cost: the slower of its compute
+    and memory terms.  The autotuner (``kernels.autotune``) seeds its
+    measured search with this — candidates whose *allocated* work (e_alloc
+    padding included) predicts slower than the incumbent's bound are not
+    worth timing."""
+    return max(cost["flops"] / hw.peak_flops, cost["bytes"] / hw.hbm_bw)
+
+
+def achieved_fractions(cost: Dict[str, float], seconds: float,
+                       hw: HW = V5E) -> Dict[str, float]:
+    """Achieved-vs-peak fractions for a measured run of an analytic cost —
+    the autotuner's scoring function (``cost`` holds *useful* work, so a
+    layout that shrinks padding raises the fraction at equal wall time)."""
+    secs = max(seconds, 1e-12)
+    return {"frac_peak_flops": cost["flops"] / secs / hw.peak_flops,
+            "frac_peak_bw": cost["bytes"] / secs / hw.hbm_bw}
 
 
 @dataclasses.dataclass

@@ -241,7 +241,8 @@ class AsyncDatalogService:
 
         The pre-unification flat keys (``queue_depth``, ``queue_limit``,
         ``max_wait_ms``, ``max_batch``, ``mean_flush`` and the bare counter
-        names) remain as deprecated aliases for one release.
+        names) are GONE after their one-release deprecation window — read
+        the nested sections.
         """
         with self.svc.lock:
             rep = self.svc.explain()
@@ -257,13 +258,6 @@ class AsyncDatalogService:
                        "mean_flush": mean_flush,
                        "max_flush": st["max_flush"]},
             "counters": dict(st),
-            # deprecated flat aliases (one release):
-            "queue_depth": depth,
-            "queue_limit": self.queue_depth,
-            "max_wait_ms": self.max_wait * 1000.0,
-            "max_batch": self.max_batch,
-            "mean_flush": mean_flush,
-            **st,
         }
         return rep
 

@@ -154,6 +154,9 @@ def main(argv: list[str] | None = None) -> int:
                     help="closure representation for decomposable predicates:"
                          " csr forces the O(|E|)-per-iteration packed engine,"
                          " dense the O(n^2) matrix, auto picks by density")
+    ap.add_argument("--tune", action="store_true",
+                    help="autotune the CSR kernel layout per relation "
+                         "(measured search; see kernels/autotune.py)")
     ap.add_argument("--default-cap", type=int, default=1 << 16)
     ap.add_argument("--stats", action="store_true",
                     help="print service stats after all actions")
@@ -184,6 +187,7 @@ def main(argv: list[str] | None = None) -> int:
                          default_cap=args.default_cap,
                          sparse={"auto": None, "csr": True,
                                  "dense": False}[args.sparse],
+                         tune=args.tune or None,
                          tracer=bool(args.trace_out))
     front = None
     if args.use_async:

@@ -136,6 +136,7 @@ class _DenseRelation:
         self.csr = None
         self.flips = 0  # representation changes across rebuilds (live
         self.last_flip: str | None = None  # density heuristic, ROADMAP 6c)
+        self.tuning: dict | None = None  # autotuner report (tune= on)
         self._rebuild(svc)
 
     @property
@@ -158,7 +159,14 @@ class _DenseRelation:
             use_csr = _sparse.prefer_csr(len(edges), n, svc.sparse_threshold)
         if use_csr:
             self.matrix = None
-            self.csr = _sparse.build_csr(edges, self.n_alloc, self.low.kind)
+            cfg = svc._tuned_config(self, edges)
+            if cfg is None:
+                self.csr = _sparse.build_csr(edges, self.n_alloc,
+                                             self.low.kind)
+            else:
+                from ..kernels import autotune as _at
+                self.csr = _at.build_tuned(edges, self.n_alloc,
+                                           self.low.kind, cfg)
         elif self.low.kind == "bool":
             self.csr = None
             adj = np.zeros((self.n_alloc, self.n_alloc), bool)
@@ -190,7 +198,8 @@ class _DenseRelation:
         observations land on ``svc.last_probes``."""
         if self.is_csr:
             res = _batch.run_frontier_batch_csr(
-                self.csr, srcs, svc.batch_pads, spmv=svc._spmv(self.low.kind),
+                self.csr, srcs, svc.batch_pads,
+                spmv=svc._spmv(self.low.kind, self.csr),
                 mesh=svc.mesh, init=init, probe=svc.probe)
         else:
             res = _batch.run_frontier_batch(
@@ -489,6 +498,15 @@ class DatalogService:
                       last-batch-only legacy behavior; 0 disables).
     ``bucket_floors`` per-relation ``quantize_rows`` floors threaded into
                       every engine (see ``benchmarks/bench_buckets.py``).
+    ``tune``          kernel tuning for CSR relations
+                      (``kernels.autotune``): ``True`` runs the
+                      roofline-steered measured search at every relation
+                      (re)build (cached per graph-shape signature), a
+                      pinned :class:`~repro.kernels.autotune.KernelConfig`
+                      applies without measuring, ``None``/``False`` (the
+                      default) keeps the library layout.
+                      ``explain()["kernels"]["tuning"]`` reports the chosen
+                      config and its measured gain per predicate.
     ``metrics``       unified metrics registry (``obs.metrics``): ``None``/
                       ``True`` creates one (the default-on path, per-batch
                       observes only), ``False`` disables (NullMetrics — the
@@ -517,7 +535,7 @@ class DatalogService:
                  sparse_threshold: float | None = None,
                  csr_rebuild_frac: float = 0.25, snapshot_lru: int = 1,
                  bucket_floors: dict[str, int] | None = None,
-                 metrics=None, tracer=None, probe: bool = False):
+                 tune=None, metrics=None, tracer=None, probe: bool = False):
         if isinstance(program, str):
             program = parse_program(program, constants=constants)
         self.program = program
@@ -538,6 +556,7 @@ class DatalogService:
         self.csr_rebuild_frac = csr_rebuild_frac
         self.snapshot_lru = snapshot_lru
         self.bucket_floors = dict(bucket_floors or {})
+        self.tune = tune
         self._matmul_opt = matmul
         # the base engine owns db normalization + domain validation; sharing
         # its dict means appends propagate without copying
@@ -800,9 +819,15 @@ class DatalogService:
         ``templates``  memoized ``pred/adornment`` shapes (sorted list)
         ``relations``  per-predicate carrier reports: ``{n, n_alloc,
                        semiring, repr}`` plus ``flips``/``last_flip`` after
-                       representation flips and ``nnz``/``density`` for CSR
+                       representation flips and ``nnz``/``density``/
+                       ``e_alloc``/``padding`` (the sliced-ELL per-slice
+                       allocation report) for CSR
         ``kernels``    roofline attribution per kernel
-                       (:meth:`~repro.obs.roofline_attr.KernelAttribution.report`)
+                       (:meth:`~repro.obs.roofline_attr.KernelAttribution.report`),
+                       plus a ``tuning`` entry per tuned predicate (chosen
+                       :class:`~repro.kernels.autotune.KernelConfig`,
+                       measured gain, achieved-vs-peak fractions) when
+                       ``tune=`` is on
         ``probes``     recent per-iteration fixpoint observations (probe
                        mode only; :class:`~repro.obs.FixpointProbe` dicts)
 
@@ -810,8 +835,9 @@ class DatalogService:
         (``{queue, window, counters}`` — see
         :meth:`~repro.service.admission.AsyncDatalogService.explain`).
 
-        Deprecated aliases, kept for one release: ``stats`` (= ``service``)
-        and ``dense`` (= ``relations``).
+        The pre-PR-7 flat aliases (``stats``, ``dense``) are GONE after
+        their one-release deprecation window — read ``service`` /
+        ``relations``.
         """
         rep = {
             "epoch": self.epoch,
@@ -831,15 +857,18 @@ class DatalogService:
                                  if ds.flips else {}),
                               **({"nnz": int(ds.csr.nnz)
                                   + int(ds.csr.tail_nnz),
-                                  "density": ds.csr.density()}
+                                  "density": ds.csr.density(),
+                                  "e_alloc": ds.csr.e_alloc,
+                                  "padding": ds.csr.padding_waste()}
                                  if ds.is_csr else {})}
                           for p, ds in self._dense.items()},
             "kernels": self.kernels.report(),
         }
+        tuning = {p: ds.tuning for p, ds in self._dense.items() if ds.tuning}
+        if tuning:
+            rep["kernels"]["tuning"] = tuning
         if self.probe:
             rep["probes"] = [p.as_dict() for p in self.last_probes]
-        rep["stats"] = rep["service"]       # deprecated alias (one release)
-        rep["dense"] = rep["relations"]     # deprecated alias (one release)
         return rep
 
     def _record_probe(self, pr) -> None:
@@ -855,8 +884,7 @@ class DatalogService:
         iters = int(res.iterations)
         bp = _batch.pad_batch_size(max(meta["b"], 1), self.batch_pads)
         if ds.is_csr:
-            e_alloc = int(np.prod(ds.csr.ell_idx.shape)) \
-                + int(np.prod(ds.csr.tail_ell.shape))
+            e_alloc = ds.csr.e_alloc  # sliced spine + tail allocation
             cost = csr_launch_cost(bp, ds.n_alloc, e_alloc,
                                    ds.csr.edge_val.dtype.itemsize, iters)
             kernel = f"csr_spmv:{ds.low.kind}"
@@ -974,14 +1002,34 @@ class DatalogService:
             return kops.frontier_matmul(sr.name)
         return self._matmul_opt
 
-    def _spmv(self, kind: str):
+    def _spmv(self, kind: str, csr=None):
         """Sparse segment-step override (the CSR twin of ``_matmul``): the
         ``matmul='pallas'`` option maps onto the segment-semiring SpMV
-        kernels; arbitrary dense callables stay dense-only."""
-        if self._matmul_opt == "pallas":
+        kernels; arbitrary dense callables stay dense-only.  A CSR carrying
+        a tile-skip plan (the autotuner chose ``use_kernel``) also routes to
+        the kernels — the plan is dead weight on the jnp path."""
+        if self._matmul_opt == "pallas" or (
+                csr is not None and csr.plan_cfg is not None):
             from ..kernels import ops as kops
             return kops.csr_frontier_step(kind)
         return None
+
+    def _tuned_config(self, ds: _DenseRelation, edges):
+        """Resolve the kernel config for a CSR (re)build under ``tune=``:
+        a pinned :class:`~repro.kernels.autotune.KernelConfig` applies
+        as-is; ``True`` runs the measured search (cached per graph-shape
+        signature, so tail-fold rebuilds of a stable shape class don't
+        re-measure).  Returns None when tuning is off (default layout)."""
+        if not self.tune:
+            ds.tuning = None
+            return None
+        from ..kernels import autotune as _at
+        if isinstance(self.tune, _at.KernelConfig):
+            ds.tuning = {"config": self.tune.as_dict(), "pinned": True}
+            return self.tune
+        res = _at.autotune(edges, ds.n_alloc, ds.low.kind)
+        ds.tuning = {**res.as_dict(), "pinned": False}
+        return res.config
 
     def _format(self, ds: _DenseRelation, src: int, row):
         if ds.low.kind == "bool":

@@ -63,7 +63,7 @@ def test_concurrent_submitters_match_sequential_ask():
         want = eng.ask("tc", (s, None))
         for got in results[s]:
             assert np.array_equal(np.asarray(got), np.asarray(want)), s
-    rep = front.explain()["admission"]
+    rep = front.explain()["admission"]["counters"]
     assert rep["submitted"] == 32 and rep["shed"] == 0
     assert rep["completed"] + rep["short_circuits"] == 32
     front.close()

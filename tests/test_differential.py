@@ -3,7 +3,7 @@
 Random programs (TC / nonlinear TC / same-generation / mutual recursion /
 min-agg shortest paths, with random constants and repeated variables in the
 goals) over random EDBs, checked against ``_reference.ref_model`` — a naive
-fixpoint over Python sets — on EIGHT evaluation paths:
+fixpoint over Python sets — on TEN evaluation paths:
 
   1. naive full-model ``Engine.run()`` + goal filter
   2. ``Engine.ask``           (magic-sets restricted evaluation)
@@ -25,6 +25,10 @@ fixpoint over Python sets — on EIGHT evaluation paths:
                                  must be bit-identical to the plain dense
                                  service, and re-serving a warm batch must
                                  not retrace any fixpoint)
+ 10. tuned-kernel serving        (a pinned ``KernelConfig(use_kernel=True)``
+                                 forces sliced-ELL + the Pallas tile-skip
+                                 kernels on every CSR relation; answers must
+                                 be bit-identical to the dense service's)
 
 Case count defaults to a CI-smoke size; ``DIFF_CASES=200 pytest
 tests/test_differential.py`` runs the acceptance-sized sweep (the generator
@@ -170,6 +174,20 @@ def test_differential(case):
                         got if isinstance(got, tuple) else (got,)):
             assert np.array_equal(a, b), \
                 f"case={case} query={queries[i]!r}: dense/CSR not bit-identical"
+
+    # 10. tuned-kernel serving: a pinned KernelConfig (no measurement) forces
+    # the sliced-ELL layout + Pallas tile-skip kernels on every CSR relation;
+    # answers must stay bit-identical to the dense service
+    from repro.kernels.autotune import KernelConfig
+    svc_tuned = DatalogService(text, db=db, sparse=True,
+                               tune=KernelConfig(use_kernel=True), **CAPS)
+    for i, got in enumerate(svc_tuned.ask_batch(queries)):
+        check("service-tuned", case, queries[i], got, want[i])
+        d = dense_res[i]
+        for a, b in zip(d if isinstance(d, tuple) else (d,),
+                        got if isinstance(got, tuple) else (got,)):
+            assert np.array_equal(a, b), \
+                f"case={case} query={queries[i]!r}: tuned not bit-identical"
 
     # 8. async admission front-end: the same queries submitted concurrently
     # from two threads; arrival timing makes the dispatcher's flush

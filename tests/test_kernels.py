@@ -215,3 +215,105 @@ def test_csr_kernel_drives_sparse_fixpoint():
     want = reachable_batch_dense(jnp.asarray(adj), srcs)
     assert jnp.array_equal(res_j.table, want.table)
     assert jnp.array_equal(res_k.table, want.table)
+
+
+# -- sliced-ELL / tile-skip additions (ROADMAP item 6) ----------------------
+
+
+def test_csr_minplus_spmv_pads_odd_widths():
+    """Regression: frontier widths that don't divide bn used to trip a hard
+    assert; the wrapper now pads (pad columns masked out of the min)."""
+    from repro.core import sparse
+    for n in (100, 130, 200):
+        csr, edges = _rand_csr(n, 0.05, "minplus", seed=n)
+        w = np.full((n, n), np.inf, np.float32)
+        np.minimum.at(w, (edges[:, 0], edges[:, 1]),
+                      edges[:, 2].astype(np.float32))
+        f = np.asarray(rand_dist(3, n, 0.3))
+        want = ref.minplus_ref(jnp.asarray(f), jnp.asarray(w))
+        for bn in (64, 96, 128, 256):
+            got = ops.csr_minplus(jnp.asarray(f), csr.src_idx, csr.col_idx,
+                                  csr.edge_val, bn=bn)
+            assert jnp.array_equal(got, want), (n, bn)
+
+
+def test_csr_minplus_tiled_matches_untiled():
+    """The scalar-prefetch tile-skip kernel == the dense-grid kernel == the
+    jnp oracle, across plan block sizes."""
+    from repro.core import sparse
+    n = 128
+    csr0, edges = _rand_csr(n, 0.04, "minplus", seed=3)
+    w = np.full((n, n), np.inf, np.float32)
+    np.minimum.at(w, (edges[:, 0], edges[:, 1]), edges[:, 2].astype(np.float32))
+    f = jnp.asarray(np.asarray(rand_dist(4, n, 0.3)))
+    want = ref.minplus_ref(f, jnp.asarray(w))
+    for chunk, bn in ((32, 128), (16, 64), (64, 128)):
+        csr = sparse.build_csr(edges, n, "minplus", kernel_plan=(chunk, bn))
+        assert csr.plan_cfg is not None and csr.plan_tile is not None
+        got = ops.csr_minplus_tiled(
+            f, csr.src_idx, csr.col_idx, csr.edge_val, csr.plan_tile,
+            csr.plan_chunk, csr.plan_first, chunk=csr.plan_cfg[0],
+            bn=csr.plan_cfg[1])
+        assert jnp.array_equal(got, want), (chunk, bn)
+
+
+def test_tiled_kernel_drives_fixpoint_with_tail():
+    """A planned CSR + COO tail routed through ``csr_frontier_step`` (the
+    tile-skip spine pass + untiled tail pass) reaches the same closure."""
+    from repro.core import sparse
+    from repro.core.seminaive import distances_batch_dense
+    n = 96
+    csr0, edges = _rand_csr(n, 0.05, "minplus", seed=11)
+    csr = sparse.build_csr(edges, n, "minplus", kernel_plan=(32, 128))
+    csr = sparse.csr_append(csr, np.array([[0, 95, 2], [95, 1, 3]], np.int64))
+    assert int(csr.tail_nnz) > 0
+    w = np.full((n, n), np.inf, np.float32)
+    np.minimum.at(w, (edges[:, 0], edges[:, 1]), edges[:, 2].astype(np.float32))
+    w[0, 95] = min(w[0, 95], 2.0)
+    w[95, 1] = min(w[95, 1], 3.0)
+    srcs = [0, 9, 40]
+    got = sparse.distances_batch_csr(csr, srcs,
+                                     spmv=ops.csr_frontier_step("minplus"))
+    want = distances_batch_dense(jnp.asarray(w), srcs)
+    assert jnp.array_equal(got.table, want.table)
+
+
+def test_bool_chunk_skip_inactive_frontier():
+    """The bool kernel's per-chunk activity prefetch: a frontier touching no
+    arc source must yield all-False, and partial activity must not drop
+    contributions (oracle equality on a hub graph)."""
+    from repro.core import sparse
+    from repro.data.graphs import powerlaw_graph
+    edges = powerlaw_graph(96, 300, seed=2)
+    csr = sparse.build_csr(edges, 128, "bool")
+    dead = np.zeros((4, 128), bool)  # no live sources at all
+    got = ops.csr_bool(jnp.asarray(dead), csr.src_idx, csr.col_idx,
+                       csr.edge_val)
+    assert not bool(jnp.any(got))
+    adj = np.zeros((128, 128), np.float32)
+    adj[edges[:, 0], edges[:, 1]] = 1.0
+    part = RNG.random((4, 128)) < 0.05  # sparse frontier: most chunks skip
+    want = jnp.asarray((part.astype(np.float32) @ adj) > 0)
+    got = ops.csr_bool(jnp.asarray(part), csr.src_idx, csr.col_idx,
+                       csr.edge_val)
+    assert jnp.array_equal(got, want)
+
+
+def test_autotune_pinned_and_measured():
+    """Pinned configs skip measurement; a measured search on a heavy-tailed
+    graph prefers a sliced ladder over single-width and caches by shape."""
+    from repro.data.graphs import powerlaw_graph
+    from repro.kernels import autotune as at
+    edges = powerlaw_graph(256, 1500, alpha=1.5, seed=4)
+    cfg = at.KernelConfig(slice_floor=2, slice_stride=1)
+    csr = at.build_tuned(edges, 256, "bool", cfg)
+    assert csr.ell_cfg == (2, 1) and csr.plan_cfg is None
+    at.clear_cache()
+    res = at.autotune(edges, 256, "bool", include_kernels=False)
+    assert not res.cached and res.gain > 0
+    assert res.config.slice_stride > 0, \
+        "heavy-tail search should not pick single-width"
+    assert any(c["measured_s"] is None for c in res.candidates), \
+        "analytic seed should prune at least one candidate"
+    res2 = at.autotune(edges, 256, "bool", include_kernels=False)
+    assert res2.cached and res2.config == res.config

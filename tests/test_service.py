@@ -260,9 +260,9 @@ def test_append_resumes_dense_and_matches_fresh_engine():
 def test_append_grows_domain_past_allocation():
     svc = DatalogService(TC, db={"arc": EDGES}, default_cap=2048)
     svc.ask("tc", (0, None))
-    assert svc.explain()["dense"]["tc"]["n_alloc"] == 128
+    assert svc.explain()["relations"]["tc"]["n_alloc"] == 128
     svc.append("arc", [[3, 200]])
-    assert svc.explain()["dense"]["tc"]["n_alloc"] == 256
+    assert svc.explain()["relations"]["tc"]["n_alloc"] == 256
     eng = Engine(TC, db={"arc": np.concatenate([EDGES, [[3, 200]]])},
                  default_cap=2048)
     assert rows_set(svc.ask("tc", (0, None))) == \

@@ -60,9 +60,16 @@ def test_build_csr_roundtrip_and_buckets():
     assert csr.n_alloc == 64 and int(csr.nnz) == len(edges)
     # padded to the bucket, always leaving a sentinel slot for the ELL pads
     assert csr.capacity == quantize_rows(len(edges) + 1)
-    assert csr.deg_cap == quantize_rows(  # degree bucket = max IN-degree
+    assert csr.deg_cap == quantize_rows(  # widest slice = max IN-degree rung
         int(np.bincount(edges[:, 1]).max()), minimum=1)
-    assert csr.ell_idx.shape == (64, csr.deg_cap)
+    # sliced-ELL invariants: ranks cover every allocated vertex exactly once,
+    # and exact-row slices keep the spine allocation near |E|
+    assert csr.ell_rank.shape == (64,)
+    assert sum(int(t.shape[0]) for t in csr.ell_slices) == int(
+        np.asarray(csr.ell_rank).max()) + 1
+    waste = csr.padding_waste()
+    assert waste["e_alloc"] == csr.e_alloc - int(np.prod(csr.tail_ell.shape))
+    assert sum(s["live"] for s in waste["slices"]) == len(edges)
     assert rows_set(csr.edges_numpy()) == rows_set(edges)
     # row_ptr spans each source's out-edges
     rp = np.asarray(csr.row_ptr)
@@ -197,8 +204,8 @@ def test_service_auto_heuristic_routes_by_density():
     s2 = DatalogService(TC, db={"arc": dense_edges})
     s1.ask("tc", (0, None))
     s2.ask("tc", (0, None))
-    assert s1.explain()["dense"]["tc"]["repr"] == "csr"
-    assert s2.explain()["dense"]["tc"]["repr"] == "dense"
+    assert s1.explain()["relations"]["tc"]["repr"] == "csr"
+    assert s2.explain()["relations"]["tc"]["repr"] == "dense"
     assert s1.stats.csr_fixpoints == 1 and s2.stats.csr_fixpoints == 0
 
 
@@ -253,7 +260,7 @@ def test_service_append_flips_csr_back_to_dense():
     svc.append("arc", densify)
     assert not ds.is_csr, "rebuild should have flipped the carrier dense"
     assert ds.flips == 1 and ds.last_flip == "csr->dense"
-    rep = svc.explain()["dense"]["tc"]
+    rep = svc.explain()["relations"]["tc"]
     assert rep["repr"] == "dense" and rep["flips"] == 1
     assert rep["last_flip"] == "csr->dense"
     # answers after the flip match a from-scratch dense service
@@ -269,7 +276,7 @@ def test_service_append_flips_csr_back_to_dense():
     assert ds2.is_csr
     svc2.append("arc", np.array([[0, 255]], np.int64))
     assert ds2.is_csr and ds2.flips == 0
-    assert "flips" not in svc2.explain()["dense"]["tc"]
+    assert "flips" not in svc2.explain()["relations"]["tc"]
 
 
 def test_engine_ask_dense_sparse_knob():
@@ -363,3 +370,70 @@ def _one_entry_budget(svc) -> int:
     from repro.service.incremental import entry_bytes
     return max(entry_bytes(e) for _, e in svc.cache.items()
                if e.kind == "dense")
+
+
+# ---------------------------------------------------------------------------
+# heavy-tailed (power-law) graphs: the sliced-ELL regime
+# ---------------------------------------------------------------------------
+
+
+def _hub_edges(n=96, m=400, alpha=1.5, seed=3):
+    from repro.data.graphs import powerlaw_graph
+    return powerlaw_graph(n, m, alpha=alpha, seed=seed)
+
+
+def _adj(edges, n):
+    adj = np.zeros((n, n), bool)
+    adj[edges[:, 0], edges[:, 1]] = True
+    return adj
+
+
+@pytest.mark.parametrize("ell_cfg", [(1, 0), (1, 1), (4, 2), (8, 1)])
+def test_sliced_ell_roundtrip_heavy_tail(ell_cfg):
+    edges = _hub_edges()
+    csr = sparse.build_csr(edges, 128, "bool", ell_cfg=ell_cfg)
+    assert rows_set(csr.edges_numpy()) == rows_set(edges)
+    # exact-row slices bound spine padding on hub graphs; single-width can't
+    if ell_cfg[1] > 0:
+        single = sparse.build_csr(edges, 128, "bool", ell_cfg=(1, 0))
+        assert csr.padding_waste()["waste"] < \
+            single.padding_waste()["waste"] / 4
+    if ell_cfg == (1, 1):  # the default ladder meets the 2x alloc bound
+        assert csr.padding_waste()["waste"] <= 2.0
+    got = sparse.reachable_batch_csr(csr, [0, 1, 2, 3])
+    want = reachable_batch_dense(jnp.asarray(_adj(edges, 128)), [0, 1, 2, 3])
+    assert jnp.array_equal(got.table, want.table)
+
+
+def test_sliced_ell_append_and_tailfold_rebuild_heavy_tail():
+    edges = _hub_edges(m=300, seed=5)
+    csr = sparse.build_csr(edges, 128, "bool", ell_cfg=(1, 1), tail_min=4)
+    extra = _hub_edges(m=120, seed=9)
+    csr2 = csr
+    for i in range(0, len(extra), 40):  # force several tail-fold rebuilds
+        csr2 = sparse.csr_append(csr2, extra[i:i + 40])
+    assert csr2.ell_cfg == (1, 1), "rebuilds must carry the slice config"
+    want = rows_set(np.concatenate([edges, extra]))
+    assert rows_set(csr2.edges_numpy()) == want
+    got = sparse.reachable_batch_csr(csr2, [0, 1])
+    dense = reachable_batch_dense(
+        jnp.asarray(_adj(np.asarray(sorted(want), np.int64), 128)), [0, 1])
+    assert jnp.array_equal(got.table, dense.table)
+
+
+def test_sliced_ell_minplus_bit_identity_on_hubs():
+    base = _hub_edges(n=64, m=250, seed=7)
+    rng = np.random.default_rng(7)
+    edges = np.concatenate(
+        [base, rng.integers(1, 9, (len(base), 1))], axis=1).astype(np.int64)
+    dists = {}
+    for ell_cfg in [(1, 0), (1, 1), (4, 2)]:
+        csr = sparse.build_csr(edges, 64, "minplus", ell_cfg=ell_cfg)
+        dists[ell_cfg] = np.asarray(
+            sparse.distances_batch_csr(csr, [0, 1, 2]).table)
+    w = np.full((64, 64), np.inf, np.float32)
+    np.minimum.at(w, (edges[:, 0], edges[:, 1]), edges[:, 2].astype(np.float32))
+    want = np.asarray(
+        distances_batch_dense(jnp.asarray(w), [0, 1, 2]).table)
+    for cfg, got in dists.items():
+        assert np.array_equal(got, want), f"ell_cfg={cfg} diverged"
