@@ -61,6 +61,9 @@ python benchmarks/bench_serve.py --smoke
 echo "== sparse serving smoke bench (CSR >= dense qps + warm-shape trace assert) =="
 python benchmarks/bench_serve.py --smoke --sparse
 
+echo "== counting smoke bench (fast path >= tuple-engine qps, exact int counts) =="
+python benchmarks/bench_serve.py --smoke --counting
+
 echo "== async admission smoke bench (>= 1.5x sync qps + warm-flush trace assert) =="
 python benchmarks/bench_serve.py --smoke --async
 

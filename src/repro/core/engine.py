@@ -401,7 +401,8 @@ class GroupExecutor:
         valid = b.valid
         for a in cr.ariths:
             l, r = term_col(a.lhs, shape), term_col(a.rhs, shape)
-            res = l + r if a.op == "+" else l - r
+            res = (l + r if a.op == "+" else
+                   l * r if a.op == "*" else l - r)
             if a.target.name in b.cols:  # already bound => equality constraint
                 valid = valid & (b.cols[a.target.name] == res)
             else:
@@ -500,7 +501,12 @@ class Engine:
         self.max_iters = max_iters
         def _norm(v):
             v = np.asarray(v, np.int64)
-            return v[:, None] if v.ndim == 1 else v  # reshape(-1) chokes on 0 rows
+            v = v[:, None] if v.ndim == 1 else v  # reshape(-1) chokes on 0 rows
+            # EDB relations are SETS of facts: an exact duplicate row is the
+            # same fact, and keeping it would double-count the duplicated
+            # body binding in additive (count/sum) aggregates — bool/min/max
+            # are duplicate-insensitive, which is why this went unnoticed
+            return np.unique(v, axis=0) if len(v) else v
         self.db: dict[str, np.ndarray] = {k: _norm(v) for k, v in db.items()}
         limit = (1 << bits) - 1
         for k, v in self.db.items():

@@ -93,7 +93,7 @@ class Comparison:
 
 @dataclasses.dataclass(frozen=True)
 class Arith:
-    """target = lhs op rhs (op in +, -, min, max) — the interpreted goals of §2."""
+    """target = lhs op rhs (op in +, -, *) — the interpreted goals of §2."""
 
     target: Var
     op: str

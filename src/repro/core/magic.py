@@ -402,13 +402,27 @@ def frontier_query_source(q: Literal) -> int | None:
 class FrontierLowering:
     """A program admitting the dense single-source plan.
 
-    ``kind`` selects the semiring: ``'bool'`` (reachability / TC) or
-    ``'minplus'`` (single-source shortest distances).
+    ``kind`` selects the semiring carrier: ``'bool'`` (reachability / TC),
+    ``'minplus'`` (shortest distances), ``'maxplus'`` (longest paths over
+    DAGs), or ``'plustimes'`` (path counting / weighted sums — the additive
+    carrier, which needs the accumulate-form fixpoint with a termination
+    bound instead of the idempotent convergence test).
     """
 
     pred: str
     edb: str
-    kind: str  # 'bool' | 'minplus'
+    kind: str  # 'bool' | 'minplus' | 'maxplus' | 'plustimes'
+
+
+#: head aggregate -> (lowering kind, the ⊗-combine Arith op of the rec rule).
+#: min/max ride tropical carriers (⊗ = +); sum/msum ride the additive
+#: plus-times carrier (⊗ = ×), the paper's count/sum-in-recursion shape.
+_AGG_LOWERING = {
+    "min": ("minplus", "+"),
+    "max": ("maxplus", "+"),
+    "sum": ("plustimes", "*"),
+    "msum": ("plustimes", "*"),
+}
 
 
 def detect_frontier_lowering(program: Program, pred: str) -> FrontierLowering | None:
@@ -446,9 +460,12 @@ def detect_frontier_lowering(program: Program, pred: str) -> FrontierLowering | 
 
     agg = exit_r.head.arity == 3
     if agg:
-        if not (exit_r.agg and exit_r.agg.kind == "min" and exit_r.agg.position == 2
-                and rec_r.agg and rec_r.agg.kind == "min" and rec_r.agg.position == 2):
+        if not (exit_r.agg and exit_r.agg.kind in _AGG_LOWERING
+                and exit_r.agg.position == 2
+                and rec_r.agg and rec_r.agg.kind == exit_r.agg.kind
+                and rec_r.agg.position == 2):
             return None
+        kind, combine_op = _AGG_LOWERING[exit_r.agg.kind]
     elif exit_r.head.arity != 2 or exit_r.agg or rec_r.agg:
         return None
 
@@ -470,11 +487,11 @@ def detect_frontier_lowering(program: Program, pred: str) -> FrontierLowering | 
         if len(ariths) != 1 or len(rec_r.body) != 3:
             return None
         a = ariths[0]
-        if a.op != "+" or a.target != h[2]:
+        if a.op != combine_op or a.target != h[2]:
             return None
         if {a.lhs, a.rhs} != {rec_l.args[2], edb_l.args[2]}:
             return None
-        return FrontierLowering(pred, e_lit.pred, "minplus")
+        return FrontierLowering(pred, e_lit.pred, kind)
     if len(rec_r.body) != 2:
         return None
     return FrontierLowering(pred, e_lit.pred, "bool")

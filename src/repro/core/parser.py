@@ -29,7 +29,7 @@ _TOKEN = re.compile(
     r"(?P<lpar>\()|(?P<rpar>\))|"
     r"(?P<langle>⟨)|(?P<rangle>⟩)|"
     r"(?P<comma>,)|(?P<dot>\.)|(?P<neg>~)|"
-    r"(?P<plus>\+)|(?P<minus>-)|"
+    r"(?P<plus>\+)|(?P<minus>-)|(?P<star>\*)|"
     r"(?P<num>\d+)|"
     r"(?P<name>[A-Za-z_][A-Za-z0-9_]*)"
     r")"
@@ -201,10 +201,10 @@ def _parse_goal(s: _Stream, constants) -> Goal:
     if opk != "cmp":
         raise ParseError(f"expected comparison after {lhs!r}, got {opv}")
     rhs = _parse_term(s, constants)
-    if s.peek()[0] in ("plus", "minus"):
+    if s.peek()[0] in ("plus", "minus", "star"):
         if opv != "=":
             raise ParseError("arithmetic only allowed with '='")
-        aop = "+" if s.next()[0] == "plus" else "-"
+        aop = {"plus": "+", "minus": "-", "star": "*"}[s.next()[0]]
         rhs2 = _parse_term(s, constants)
         if not isinstance(lhs, Var):
             raise ParseError("arithmetic target must be a variable")

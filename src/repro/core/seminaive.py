@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 from typing import Callable
 
 import jax
@@ -28,7 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .relation import EMPTY, AggTable, FactTable, Schema, expand_join
-from .semiring import BOOL, MIN_PLUS, Semiring
+from .semiring import BOOL, MIN_PLUS, PLUS_TIMES, Semiring
 
 # ---------------------------------------------------------------------------
 # Trace accounting (shared by every shape-keyed jitted fixpoint)
@@ -39,16 +40,28 @@ from .semiring import BOOL, MIN_PLUS, Semiring
 #: batches of ANY representation skip compilation.  Exposed through
 #: ``engine.fixpoint_trace_count()``.
 _TRACE_COUNT = 0
+# traces fire from the admission front-end's dispatcher/finalizer/submitter
+# threads concurrently; a bare += on the global is a lost-update race, and
+# ci.sh asserts warm-batch stability off exact counts
+_TRACE_LOCK = threading.Lock()
 
 
 def bump_trace_count() -> None:
     """Call at trace time (inside a jitted body): executes once per compile."""
     global _TRACE_COUNT
-    _TRACE_COUNT += 1
+    with _TRACE_LOCK:
+        _TRACE_COUNT += 1
 
 
 def trace_count() -> int:
     return _TRACE_COUNT
+
+
+#: generated-fact accumulator dtype.  ``jnp.int64`` is a silent int32 under
+#: default config (no ``jax_enable_x64``), so spell out the dtype that will
+#: actually exist and let the probe layer assert no-overflow against it.
+GEN_DTYPE = jnp.asarray(0, jnp.int64).dtype
+GEN_MAX = jnp.iinfo(GEN_DTYPE).max
 
 
 # ---------------------------------------------------------------------------
@@ -111,11 +124,11 @@ def fixpoint_dense(
         def body(s):
             total, delta, it, gen = s
             new = mm(delta, arc)
-            gen = gen + jnp.sum(new != sr.zero).astype(jnp.int64)
+            gen = gen + jnp.sum(new != sr.zero).astype(GEN_DTYPE)
             return total + new, new, it + 1, gen
 
         total, _, it, gen = jax.lax.while_loop(
-            cond, body, (init, init, jnp.int32(0), jnp.int64(0))
+            cond, body, (init, init, jnp.int32(0), jnp.zeros((), GEN_DTYPE))
         )
         return DenseResult(total, it, gen)
 
@@ -147,17 +160,47 @@ def fixpoint_dense(
         D, mask, it, gen = s
         Dn, upd = step(D, mask)
         changed = _ne(sr, Dn, D)
-        gen = gen + jnp.sum(upd != jnp.asarray(sr.zero, D.dtype)).astype(jnp.int64)
+        gen = gen + jnp.sum(upd != jnp.asarray(sr.zero, D.dtype)).astype(GEN_DTYPE)
         new_mask = jnp.any(changed, axis=-1) if D.ndim > 1 else changed
         return Dn, new_mask, it + 1, gen
 
     mask0 = jnp.ones(init.shape[:-1] if init.ndim > 1 else init.shape, bool)
-    D, mask, it, gen = jax.lax.while_loop(cond, body, (init, mask0, jnp.int32(0), jnp.int64(0)))
+    D, mask, it, gen = jax.lax.while_loop(
+        cond, body, (init, mask0, jnp.int32(0), jnp.zeros((), GEN_DTYPE)))
     return DenseResult(D, it, gen)
 
 
 def _transpose_arc(sr: Semiring, arc: jax.Array) -> jax.Array:
     return arc.T
+
+
+# additive-⊕ termination -------------------------------------------------------
+# Idempotent carriers converge unconditionally; the additive (+,×) carrier
+# only terminates when the program is acyclic (paper §2.1's count/sum
+# termination discussion).  The jitted while_loop cannot raise, so additive
+# fixpoints run under a tight iteration bound and the *host* checks it after.
+
+
+class FixpointDivergenceError(RuntimeError):
+    """An additive (non-idempotent ⊕) fixpoint hit its iteration bound —
+    the underlying graph is cyclic, so count/sum-in-recursion diverges."""
+
+
+def additive_max_iters(n: int) -> int:
+    """Iteration bound for accumulate-form fixpoints: an acyclic n-vertex
+    graph's longest path has < n arcs, so the delta drains within n steps;
+    hitting n + 2 means a cycle keeps feeding it."""
+    return int(n) + 2
+
+
+def check_additive_converged(res: DenseResult, max_iters: int,
+                             what: str = "additive fixpoint") -> DenseResult:
+    if int(res.iterations) >= max_iters:
+        raise FixpointDivergenceError(
+            f"{what} hit its iteration bound ({max_iters}): the graph is "
+            "cyclic, so the (+,×) carrier has no finite fixpoint — additive "
+            "aggregates in recursion require an acyclic EDB")
+    return res
 
 
 # convenience graph front-ends ------------------------------------------------
@@ -259,6 +302,19 @@ def distances_batch_dense(w: jax.Array, srcs, matmul=None,
     init = w[jnp.asarray(srcs)]
     return fixpoint_dense_cached(MIN_PLUS, w, init, form="vector",
                                  matmul=matmul, max_iters=max_iters)
+
+
+def counts_batch_dense(w: jax.Array, srcs, matmul=None,
+                       max_iters: int | None = None) -> DenseResult:
+    """``?- cpath(s, Z, C)`` for a batch of sources: plus-times path counts
+    via the accumulate form (total = Σ_k w[s]·wᵏ), guarded by the additive
+    iteration bound — raises :class:`FixpointDivergenceError` on cycles."""
+    init = w[jnp.asarray(srcs)]
+    if max_iters is None:
+        max_iters = additive_max_iters(w.shape[-1])
+    res = fixpoint_dense_cached(PLUS_TIMES, w, init, form="accumulate",
+                                matmul=matmul, max_iters=max_iters)
+    return check_additive_converged(res, max_iters, "plus-times batch")
 
 
 # ---------------------------------------------------------------------------

@@ -103,6 +103,41 @@ PLUS_TIMES = Semiring(
 
 BY_NAME = {s.name: s for s in (BOOL, MIN_PLUS, MAX_PLUS, PLUS_TIMES)}
 
+
+class CarrierError(ValueError):
+    """An unknown/unsupported lowering kind asked for a semiring carrier."""
+
+
+#: frontier-lowering kind (magic.FrontierLowering.kind) -> semiring carrier.
+#: The serving layer must route through this table — a kind outside it is a
+#: programming error and raises, rather than silently computing min-plus.
+AGG_TO_SEMIRING = {
+    "bool": BOOL,
+    "minplus": MIN_PLUS,
+    "maxplus": MAX_PLUS,
+    "plustimes": PLUS_TIMES,
+}
+
+
+def carrier_for(kind: str) -> Semiring:
+    """Resolve a lowering kind to its semiring, raising a typed error on
+    unknown kinds (the historical routing silently fell back to min-plus)."""
+    try:
+        return AGG_TO_SEMIRING[kind]
+    except KeyError:
+        raise CarrierError(
+            f"no semiring carrier for lowering kind {kind!r}; known kinds: "
+            f"{sorted(AGG_TO_SEMIRING)}") from None
+
+
+def edge_arity(kind: str) -> int:
+    """EDB row arity for a lowering kind: (src, dst) on the boolean carrier,
+    (src, dst, weight) on every weighted one.  Routes through
+    :func:`carrier_for` so unknown kinds raise :class:`CarrierError` here
+    too instead of silently picking a layout."""
+    return 2 if carrier_for(kind) is BOOL else 3
+
+
 #: aggregate name (as written in rule heads) -> semiring that carries it
 AGGREGATE_SEMIRING = {
     "min": MIN_PLUS,

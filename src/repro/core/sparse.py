@@ -65,9 +65,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .semiring import BOOL, MIN_PLUS, Semiring
-from .seminaive import (DenseResult, _ne, bump_trace_count, quantize_ladder,
-                        quantize_rows)
+from .semiring import Semiring, carrier_for
+from .seminaive import (GEN_DTYPE, DenseResult, _ne, additive_max_iters,
+                        bump_trace_count, check_additive_converged,
+                        quantize_ladder, quantize_rows)
 
 #: density |E|/n² below which the serving layer prefers CSR over the dense
 #: matrix (the auto heuristic; PlanOptions.sparse / DatalogService(sparse=)
@@ -87,7 +88,9 @@ def prefer_csr(nnz: int, n: int, threshold: float = DEFAULT_SPARSE_THRESHOLD) ->
 
 
 def _semiring_of(kind: str) -> Semiring:
-    return BOOL if kind == "bool" else MIN_PLUS
+    # routed through the carrier table — an unknown kind is a typed error,
+    # never a silent min-plus fallback (the session.py misrouting bug class)
+    return carrier_for(kind)
 
 
 @functools.partial(
@@ -131,7 +134,7 @@ class CSRMatrix:
     #         layer tracks live growth itself and the segment maps cover all
     #         of n_alloc regardless
     n_alloc: int  # padded domain (dense twin's n_align contract)
-    kind: str  # 'bool' | 'minplus'
+    kind: str  # 'bool' | 'minplus' | 'maxplus' | 'plustimes'
     ell_cfg: tuple  # (floor, stride) capacity-ladder config; stride 0 =
     #                 single-width (legacy) ELL
     plan_cfg: tuple | None  # (chunk, bn) of the tile-skip plan, or None
@@ -204,13 +207,19 @@ def _pack_edges(edges: np.ndarray, kind: str):
     edges = np.asarray(edges, np.int64)
     if edges.ndim != 2 or edges.shape[1] not in (2, 3):
         raise ValueError(f"edge list must be (m, 2|3), got {edges.shape}")
+    if len(edges) and not _semiring_of(kind).idempotent:
+        # set semantics: exact duplicate facts collapse BEFORE the segment
+        # sum — an idempotent ⊕ absorbs duplicates for free, the additive
+        # (+,×) carrier would double-bill them.  Parallel arcs with distinct
+        # weights are distinct facts and still sum, as they should.
+        edges = np.unique(edges, axis=0)
     src = edges[:, 0].astype(np.int32)
     dst = edges[:, 1].astype(np.int32)
     if kind == "bool":
         val = np.ones(len(edges), bool)
     else:
         if edges.shape[1] != 3:
-            raise ValueError("minplus CSR wants (src, dst, weight) rows")
+            raise ValueError(f"{kind} CSR wants (src, dst, weight) rows")
         val = edges[:, 2].astype(np.float32)
     return src, dst, val
 
@@ -331,10 +340,11 @@ def build_csr(edges: np.ndarray, n_alloc: int, kind: str = "bool",
 
     Arcs sort by (src, dst); ``nnz`` pads to a power-of-two bucket (always
     leaving at least one slot free) with sentinel arcs whose ``edge_val`` is
-    the ⊕-zero (False / +inf) so they can never contribute — the sparse twin
-    of ``build_edb_index``'s EMPTY pad.  Slice pad entries point at the last
-    sentinel slot.  Duplicate arcs need no dedup: both carriers' ⊕ is
-    idempotent.
+    the ⊕-zero (False / +inf / -inf / 0) so they can never contribute — the
+    sparse twin of ``build_edb_index``'s EMPTY pad.  Slice pad entries point
+    at the last sentinel slot.  Duplicate arcs under an idempotent ⊕ need no
+    dedup; the additive plus-times carrier dedupes exact duplicate rows in
+    ``_pack_edges`` (set semantics) before the segment sum.
 
     ``ell_cfg=(floor, stride)`` sets the sliced-ELL capacity ladder
     (``stride=0`` = single-width legacy); ``kernel_plan=(chunk, bn)`` also
@@ -408,6 +418,14 @@ def csr_append(csr: CSRMatrix, rows: np.ndarray,
     Arcs must stay inside ``n_alloc`` — domain growth is the caller's rebuild
     (the serving layer re-allocates exactly like its dense twin).
     """
+    if not csr.semiring.idempotent and len(rows):
+        # set semantics on append too: a fact already in the spine/tail is a
+        # no-op, not a second additive contribution (this also keeps the
+        # counting increment-replay resume sound — Δ must be disjoint)
+        have = {tuple(r) for r in csr.edges_numpy().tolist()}
+        uniq = np.unique(np.asarray(rows, np.int64), axis=0)
+        rows = np.asarray([r for r in uniq.tolist() if tuple(r) not in have],
+                          np.int64).reshape(-1, 3)
     src, dst, val = _pack_edges(rows, csr.kind)
     if len(src) and int(max(src.max(), dst.max())) >= csr.n_alloc:
         raise ValueError("appended arcs outgrow n_alloc; rebuild the CSR")
@@ -468,6 +486,28 @@ def _sliced_step_min(f: jax.Array, src, val, slices, rank) -> jax.Array:
     return jnp.concatenate(parts, axis=1)[:, rank]
 
 
+def _ell_step_max(f: jax.Array, src, val, ell) -> jax.Array:
+    contrib = f[:, src] + val  # -inf sentinels never win the max
+    return jnp.max(contrib[:, ell], axis=2)
+
+
+def _sliced_step_max(f: jax.Array, src, val, slices, rank) -> jax.Array:
+    contrib = f[:, src] + val
+    parts = [jnp.max(contrib[:, t], axis=2) for t in slices]
+    return jnp.concatenate(parts, axis=1)[:, rank]
+
+
+def _ell_step_sum(f: jax.Array, src, val, ell) -> jax.Array:
+    contrib = f[:, src] * val  # 0-valued sentinels contribute nothing
+    return jnp.sum(contrib[:, ell], axis=2)
+
+
+def _sliced_step_sum(f: jax.Array, src, val, slices, rank) -> jax.Array:
+    contrib = f[:, src] * val
+    parts = [jnp.sum(contrib[:, t], axis=2) for t in slices]
+    return jnp.concatenate(parts, axis=1)[:, rank]
+
+
 def csr_frontier_or(frontier: jax.Array, csr: CSRMatrix) -> jax.Array:
     """One boolean frontier step over the packed arcs: O(B·|E|).
 
@@ -492,9 +532,34 @@ def csr_frontier_min(frontier: jax.Array, csr: CSRMatrix) -> jax.Array:
     return out[0] if frontier.ndim == 1 else out
 
 
+def csr_frontier_max(frontier: jax.Array, csr: CSRMatrix) -> jax.Array:
+    """One max-plus frontier step over the packed arcs (sentinels are -inf)."""
+    f = frontier[None, :] if frontier.ndim == 1 else frontier
+    out = _sliced_step_max(f, csr.src_idx, csr.edge_val, csr.ell_slices,
+                           csr.ell_rank)
+    out = jnp.maximum(
+        out, _ell_step_max(f, csr.tail_src, csr.tail_val, csr.tail_ell))
+    return out[0] if frontier.ndim == 1 else out
+
+
+def csr_frontier_sum(frontier: jax.Array, csr: CSRMatrix) -> jax.Array:
+    """One plus-times frontier step over the packed arcs (sentinels are 0):
+    the segment reduce IS an exact sum — parallel arcs both contribute."""
+    f = frontier[None, :] if frontier.ndim == 1 else frontier
+    out = _sliced_step_sum(f, csr.src_idx, csr.edge_val, csr.ell_slices,
+                           csr.ell_rank)
+    out = out + _ell_step_sum(f, csr.tail_src, csr.tail_val, csr.tail_ell)
+    return out[0] if frontier.ndim == 1 else out
+
+
+_FRONTIER_STEPS = {"bool": csr_frontier_or, "minplus": csr_frontier_min,
+                   "maxplus": csr_frontier_max, "plustimes": csr_frontier_sum}
+
+
 def csr_frontier_step(kind: str) -> Callable:
     """Module-level step for a carrier — stable identity for jit caches."""
-    return csr_frontier_or if kind == "bool" else csr_frontier_min
+    _semiring_of(kind)  # typed CarrierError on unknown kinds
+    return _FRONTIER_STEPS[kind]
 
 
 def rows_from_sources(csr: CSRMatrix, srcs) -> jax.Array:
@@ -530,7 +595,26 @@ def fixpoint_csr(csr: CSRMatrix, init: jax.Array, spmv: Callable | None = None,
     step = spmv or csr_frontier_step(csr.kind)
     n = init.shape[-1]
     if max_iters is None:
-        max_iters = 4 * n + 8
+        max_iters = additive_max_iters(n) if not sr.idempotent else 4 * n + 8
+
+    if not sr.idempotent:
+        # accumulate form (twin of fixpoint_dense form="accumulate"): the
+        # idempotent convergence test is meaningless for additive ⊕, so the
+        # delta propagates until it drains — bounded by max_iters, which the
+        # host checks afterwards (check_additive_converged)
+        def acond(s):
+            total, delta, it, gen = s
+            return jnp.any(delta != sr.zero) & (it < max_iters)
+
+        def abody(s):
+            total, delta, it, gen = s
+            new = step(delta, csr)
+            gen = gen + jnp.sum(new != sr.zero).astype(GEN_DTYPE)
+            return total + new, new, it + 1, gen
+
+        total, _, it, gen = jax.lax.while_loop(
+            acond, abody, (init, init, jnp.int32(0), jnp.zeros((), GEN_DTYPE)))
+        return DenseResult(total, it, gen)
 
     def cond(s):
         D, mask, it, gen = s
@@ -543,13 +627,13 @@ def fixpoint_csr(csr: CSRMatrix, init: jax.Array, spmv: Callable | None = None,
         upd = step(dm, csr)
         Dn = sr.add(D, upd)
         changed = _ne(sr, Dn, D)
-        gen = gen + jnp.sum(upd != jnp.asarray(sr.zero, D.dtype)).astype(jnp.int64)
+        gen = gen + jnp.sum(upd != jnp.asarray(sr.zero, D.dtype)).astype(GEN_DTYPE)
         new_mask = jnp.any(changed, axis=-1) if D.ndim > 1 else changed
         return Dn, new_mask, it + 1, gen
 
     mask0 = jnp.ones(init.shape[:-1] if init.ndim > 1 else init.shape, bool)
     D, mask, it, gen = jax.lax.while_loop(
-        cond, body, (init, mask0, jnp.int32(0), jnp.int64(0)))
+        cond, body, (init, mask0, jnp.int32(0), jnp.zeros((), GEN_DTYPE)))
     return DenseResult(D, it, gen)
 
 
@@ -568,7 +652,9 @@ def fixpoint_csr_cached(csr: CSRMatrix, init: jax.Array,
     batches skip re-tracing.  ``spmv`` must be a module-level callable for a
     stable cache key."""
     if max_iters is None:
-        max_iters = 4 * init.shape[-1] + 8
+        n = init.shape[-1]
+        max_iters = additive_max_iters(n) if not csr.semiring.idempotent \
+            else 4 * n + 8
     return _fixpoint_csr_jit(csr, init, spmv, max_iters)
 
 
@@ -587,3 +673,16 @@ def distances_batch_csr(csr: CSRMatrix, srcs, spmv=None,
     """``?- spath(s, Z, D)`` for a batch of sources (min-plus carrier)."""
     return fixpoint_csr_cached(csr, rows_from_sources(csr, srcs), spmv=spmv,
                                max_iters=max_iters)
+
+
+def counts_batch_csr(csr: CSRMatrix, srcs, spmv=None,
+                     max_iters: int | None = None) -> DenseResult:
+    """``?- cpath(s, Z, C)`` for a batch of sources (plus-times carrier):
+    accumulate-form over the packed arcs, host-checked against the additive
+    iteration bound (:class:`~repro.core.seminaive.FixpointDivergenceError`
+    on cyclic graphs)."""
+    if max_iters is None:
+        max_iters = additive_max_iters(csr.n_alloc)
+    res = fixpoint_csr_cached(csr, rows_from_sources(csr, srcs), spmv=spmv,
+                              max_iters=max_iters)
+    return check_additive_converged(res, max_iters, "plus-times CSR batch")

@@ -52,6 +52,22 @@ def gnp_graph(n: int, p: float = 0.001, seed: int = 0) -> np.ndarray:
     return np.stack([src, dst], axis=1).astype(np.int64)
 
 
+def dag_graph(n: int, p: float = 0.01, seed: int = 0,
+              max_w: int = 1) -> np.ndarray:
+    """Random weighted DAG: (src, dst, w) arcs with src < dst — the acyclic
+    regime the additive (+,×) carrier requires (count/sum-in-recursion has
+    no finite fixpoint on cycles).  ``max_w=1`` keeps all-ones weights, so
+    the counting closure is exact path counts; larger ``max_w`` draws
+    integer weights uniformly from [1, max_w] for weighted sums and
+    longest-path (max-plus) workloads."""
+    rng = np.random.default_rng(seed)
+    mask = np.triu(rng.random((n, n)) < p, k=1)
+    src, dst = np.nonzero(mask)
+    w = (np.ones(len(src), np.int64) if max_w <= 1
+         else rng.integers(1, max_w + 1, len(src)))
+    return np.stack([src, dst, w], axis=1).astype(np.int64)
+
+
 def powerlaw_graph(n: int, m: int, alpha: float = 1.5, seed: int = 0) -> np.ndarray:
     """m-edge digraph whose IN-degrees follow a Zipf(alpha) law over n vertices.
 

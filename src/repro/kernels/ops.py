@@ -17,7 +17,8 @@ from .flash_attention import flash_attention
 from .minplus import minplus_frontier_matmul, minplus_matmul
 from .relax import relax_step
 from .rglru_scan import rglru_scan
-from .spmv import csr_bool_spmv, csr_minplus_spmv, csr_minplus_spmv_tiled
+from .spmv import (csr_bool_spmv, csr_maxplus_spmv, csr_minplus_spmv,
+                   csr_minplus_spmv_tiled, csr_plustimes_spmv)
 
 
 def auto_interpret() -> bool:
@@ -59,12 +60,29 @@ def minplus_frontier(a, b, **kw):
     return minplus_frontier_matmul(a, b, **kw)
 
 
+def plustimes_frontier(a, b, **kw):
+    # an f32 matmul IS the (+,×) contraction — XLA lowers it to the MXU
+    # directly, no Pallas indirection needed for the dense frontier
+    return jnp.matmul(a, b)
+
+
+def maxplus_frontier(a, b, **kw):
+    # max-plus is min-plus through negation: reuse the tiled min-plus kernel
+    # (−inf maps to +inf, so the ⊕-zero sentinels stay inert)
+    kw.setdefault("interpret", auto_interpret())
+    return -minplus_frontier_matmul(-a, -b, **kw)
+
+
 def semiring_matmul(name: str):
-    """Kernel-backed ⊗ for the dense engine (bool / min_plus)."""
+    """Kernel-backed ⊗ for the dense engine."""
     if name == "bool":
         return boolmm
     if name == "min_plus":
         return minplus
+    if name == "max_plus":
+        return maxplus_frontier
+    if name == "plus_times":
+        return plustimes_frontier
     raise KeyError(name)
 
 
@@ -76,6 +94,10 @@ def frontier_matmul(name: str):
         return bool_frontier
     if name == "min_plus":
         return minplus_frontier
+    if name == "max_plus":
+        return maxplus_frontier
+    if name == "plus_times":
+        return plustimes_frontier
     raise KeyError(name)
 
 
@@ -122,12 +144,45 @@ def _csr_minplus_step(frontier, csr):
     return out[0] if frontier.ndim == 1 else out
 
 
+def csr_maxplus(frontier, src, dst, val, **kw):
+    kw.setdefault("interpret", auto_interpret())
+    return csr_maxplus_spmv(frontier, src, dst, val, **kw)
+
+
+def csr_plustimes(frontier, src, dst, val, **kw):
+    kw.setdefault("interpret", auto_interpret())
+    return csr_plustimes_spmv(frontier, src, dst, val, **kw)
+
+
+def _csr_maxplus_step(frontier, csr):
+    f = frontier[None, :] if frontier.ndim == 1 else frontier
+    out = csr_maxplus(f, csr.src_idx, csr.col_idx, csr.edge_val)
+    out = jnp.maximum(
+        out, csr_maxplus(f, csr.tail_src, csr.tail_dst, csr.tail_val))
+    return out[0] if frontier.ndim == 1 else out
+
+
+def _csr_plustimes_step(frontier, csr):
+    """Kernel-backed additive step: the one-hot MXU segment-sum over the
+    spine plus the COO tail's — both exact, so the accumulate-form fixpoint
+    gets bit-identical counts to the jnp oracle path."""
+    f = frontier[None, :] if frontier.ndim == 1 else frontier
+    out = csr_plustimes(f, csr.src_idx, csr.col_idx, csr.edge_val)
+    out = out + csr_plustimes(f, csr.tail_src, csr.tail_dst, csr.tail_val)
+    return out[0] if frontier.ndim == 1 else out
+
+
 def csr_frontier_step(kind: str):
     """Kernel-backed segment-semiring SpMV step for the sparse engine
-    (``kind`` is the CSR carrier: 'bool' | 'minplus').  Module-level
-    callables — stable identities for shape-keyed jit caches."""
+    (``kind`` is the CSR carrier: 'bool' | 'minplus' | 'maxplus' |
+    'plustimes').  Module-level callables — stable identities for
+    shape-keyed jit caches."""
     if kind == "bool":
         return _csr_bool_step
     if kind == "minplus":
         return _csr_minplus_step
+    if kind == "maxplus":
+        return _csr_maxplus_step
+    if kind == "plustimes":
+        return _csr_plustimes_step
     raise KeyError(kind)

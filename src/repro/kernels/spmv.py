@@ -18,7 +18,14 @@ re-express the scatter as a structured contraction over an *edge chunk*:
   MXU work entirely.  The bitmap is O(|E|) to compute vs the O(B·|E|·n_tile)
   it can skip, and it is frontier-dependent, so it is computed on device
   each step (a host-precomputed plan cannot see the frontier).
-* **min-plus**: no MXU path (min is not multiply-accumulate), so the
+* **plus-times**: the SAME one-hot contraction as bool — ``contrib @ H`` on
+  an f32 one-hot *is* an exact segment-sum by destination (each arc lands in
+  exactly one output column), so the plus-times kernel is the bool kernel
+  with the nonzero-threshold epilogue dropped: the MXU accumulator is the
+  answer.  The additive carrier of count/sum-in-recursion therefore rides
+  the MXU for free.
+* **min-plus / max-plus**: no MXU path (min/max is not multiply-accumulate),
+  so the
   segment-min runs on the VPU as a masked broadcast-min over (B, chunk, bn)
   column tiles.  The naive grid visits every (column-tile, edge-chunk) pair
   — O(cap·n) work even when a chunk's destinations touch one tile.
@@ -148,6 +155,68 @@ def csr_bool_spmv(frontier: jax.Array, src: jax.Array, dst: jax.Array,
     return out[:B, :n]
 
 
+def _plustimes_kernel(act_ref, src_ref, dst_ref, val_ref, f_ref, o_ref,
+                      acc_ref):
+    c = pl.program_id(0)
+
+    @pl.when(c == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(act_ref[c] != 0)  # chunk-skip: all-zero sources add nothing
+    def _body():
+        f = f_ref[...]  # (B, n) f32
+        contrib = jnp.take(f, src_ref[...], axis=1) * val_ref[...]
+        chunk = src_ref.shape[0]
+        n = f.shape[1]
+        onehot = (dst_ref[...][:, None]
+                  == jax.lax.broadcasted_iota(jnp.int32, (chunk, n), 1))
+        acc_ref[...] += jnp.dot(contrib, onehot.astype(jnp.float32),
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(c == pl.num_programs(0) - 1)
+    def _epilogue():
+        o_ref[...] = acc_ref[...]  # no threshold: the sum IS the answer
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def csr_plustimes_spmv(frontier: jax.Array, src: jax.Array, dst: jax.Array,
+                       val: jax.Array, *, chunk: int = DEFAULT_CHUNK_BOOL,
+                       interpret: bool = False) -> jax.Array:
+    """(B, n) f32 ⊗_+,× packed arcs -> (B, n) f32 (exact segment-sum by dst).
+
+    Sentinel/pad arcs carry ``val = 0`` and contribute nothing; each live arc
+    hits exactly one one-hot column, so the MXU accumulation is exact (f32
+    keeps integer path counts exact to 2^24)."""
+    f, B, n = _pad_frontier(frontier, 0.0)
+    chunk = min(_pow2_floor(chunk), _pow2_floor(src.shape[0]))
+    src, dst, val = _pad_edges(src, dst, val, chunk, 0.0)
+    cap = src.shape[0]
+    nchunks = cap // chunk
+    active_src = jnp.any(f != 0.0, axis=0)  # (n,) — pad rows are all-zero
+    act = (jnp.take(active_src, src) & (val != 0.0)).reshape(nchunks, chunk)
+    act = jnp.any(act, axis=1).astype(jnp.int32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nchunks,),
+        in_specs=[
+            pl.BlockSpec((chunk,), lambda c, act: (c,)),
+            pl.BlockSpec((chunk,), lambda c, act: (c,)),
+            pl.BlockSpec((chunk,), lambda c, act: (c,)),
+            pl.BlockSpec(f.shape, lambda c, act: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec(f.shape, lambda c, act: (0, 0)),
+        scratch_shapes=[pltpu.VMEM(f.shape, jnp.float32)],
+    )
+    out = pl.pallas_call(
+        _plustimes_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(f.shape, jnp.float32),
+        interpret=interpret,
+    )(act, src, dst, val, f)
+    return out[:B, :n]
+
+
 def _minplus_kernel(src_ref, dst_ref, val_ref, f_ref, o_ref):
     j, c = pl.program_id(0), pl.program_id(1)
 
@@ -181,6 +250,52 @@ def csr_minplus_spmv(frontier: jax.Array, src: jax.Array, dst: jax.Array,
     # resident in VMEM and ⊕-accumulates across the chunk steps
     out = pl.pallas_call(
         _minplus_kernel,
+        grid=(f.shape[1] // bn, cap // chunk),
+        in_specs=[
+            pl.BlockSpec((chunk,), lambda j, c: (c,)),
+            pl.BlockSpec((chunk,), lambda j, c: (c,)),
+            pl.BlockSpec((chunk,), lambda j, c: (c,)),
+            pl.BlockSpec(f.shape, lambda j, c: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((f.shape[0], bn), lambda j, c: (0, j)),
+        out_shape=jax.ShapeDtypeStruct(f.shape, jnp.float32),
+        interpret=interpret,
+    )(src, dst, val, f)
+    return out[:B, :n]
+
+
+def _maxplus_kernel(src_ref, dst_ref, val_ref, f_ref, o_ref):
+    j, c = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, -jnp.inf)
+
+    f = f_ref[...]  # (B, n)
+    contrib = jnp.take(f, src_ref[...], axis=1) + val_ref[...]  # (B, chunk)
+    chunk = src_ref.shape[0]
+    bn = o_ref.shape[1]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, bn), 1) + j * bn
+    hit = dst_ref[...][:, None] == cols  # (chunk, bn) membership of this tile
+    cand = jnp.max(jnp.where(hit[None, :, :], contrib[:, :, None], -jnp.inf),
+                   axis=1)  # (B, bn)
+    o_ref[...] = jnp.maximum(o_ref[...], cand)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "bn", "interpret"))
+def csr_maxplus_spmv(frontier: jax.Array, src: jax.Array, dst: jax.Array,
+                     val: jax.Array, *, chunk: int = DEFAULT_CHUNK_MINPLUS,
+                     bn: int = DEFAULT_BN, interpret: bool = False) -> jax.Array:
+    """(B, n) f32 ⊗_max,+ packed arcs -> (B, n) f32 (segment-max by dst) —
+    the min-plus broadcast kernel reflected through -inf sentinels."""
+    bn = _pow2_floor(bn)
+    f, B, n = _pad_frontier(frontier, -jnp.inf, bn=bn)
+    bn = min(bn, f.shape[1])
+    chunk = min(_pow2_floor(chunk), _pow2_floor(src.shape[0]))
+    src, dst, val = _pad_edges(src, dst, val, chunk, -jnp.inf)
+    cap = src.shape[0]
+    out = pl.pallas_call(
+        _maxplus_kernel,
         grid=(f.shape[1] // bn, cap // chunk),
         in_specs=[
             pl.BlockSpec((chunk,), lambda j, c: (c,)),

@@ -34,7 +34,8 @@ from typing import Callable, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core.seminaive import DenseResult, _ne, bump_trace_count
+from ..core.seminaive import (GEN_DTYPE, GEN_MAX, DenseResult, _ne,
+                              bump_trace_count)
 from ..core.sparse import CSRMatrix, csr_frontier_step
 
 __all__ = ["FixpointProbe", "fixpoint_dense_probed", "fixpoint_csr_probed"]
@@ -75,9 +76,9 @@ def _probe_step_dense(sr, arc, D, mask, matmul):
     upd = mm(dm[None, :], arc)[0] if D.ndim == 1 else mm(dm, arc)
     Dn = sr.add(D, upd)
     changed = _ne(sr, Dn, D)
-    gen = jnp.sum(upd != zero).astype(jnp.int64)
+    gen = jnp.sum(upd != zero).astype(GEN_DTYPE)
     new_mask = jnp.any(changed, axis=-1) if D.ndim > 1 else changed
-    delta = jnp.sum(changed).astype(jnp.int64)
+    delta = jnp.sum(changed).astype(GEN_DTYPE)
     return Dn, new_mask, gen, delta
 
 
@@ -93,15 +94,18 @@ def _probe_step_csr(csr, D, mask, spmv):
     upd = step(dm, csr)
     Dn = sr.add(D, upd)
     changed = _ne(sr, Dn, D)
-    gen = jnp.sum(upd != zero).astype(jnp.int64)
+    gen = jnp.sum(upd != zero).astype(GEN_DTYPE)
     new_mask = jnp.any(changed, axis=-1) if D.ndim > 1 else changed
-    delta = jnp.sum(changed).astype(jnp.int64)
+    delta = jnp.sum(changed).astype(GEN_DTYPE)
     return Dn, new_mask, gen, delta
 
 
 @functools.partial(jax.jit, static_argnames=("sr",))
 def _count_facts(sr, x):
-    return jnp.sum(_ne(sr, x, jnp.asarray(sr.zero, x.dtype))).astype(jnp.int64)
+    # GEN_DTYPE, not a literal jnp.int64: without jax_enable_x64 an int64
+    # request silently realizes as int32 — counters must use the dtype that
+    # actually exists so the saturation guard below checks the real bound
+    return jnp.sum(_ne(sr, x, jnp.asarray(sr.zero, x.dtype))).astype(GEN_DTYPE)
 
 
 def _probed_loop(sr, init, max_iters: int, step_fn, repr_name: str
@@ -118,12 +122,21 @@ def _probed_loop(sr, init, max_iters: int, step_fn, repr_name: str
         if active == 0:
             break
         D, mask, gen, delta = step_fn(D, mask)
+        g, dl = int(gen), int(delta)
+        # the Δ accounting below (seed + ΣΔ == final for idempotent
+        # carriers) is only meaningful if no per-step counter saturated the
+        # realized accumulator dtype (int32 without jax_enable_x64)
+        assert 0 <= g < int(GEN_MAX) and 0 <= dl < int(GEN_MAX), \
+            "fixpoint probe counter saturated GEN_DTYPE"
         frontier_rows.append(active)
-        delta_facts.append(int(delta))
-        generated.append(int(gen))
+        delta_facts.append(dl)
+        generated.append(g)
         it += 1
+    total_gen = sum(generated)
+    assert total_gen < int(GEN_MAX), \
+        "fixpoint probe generated-facts total overflows GEN_DTYPE"
     res = DenseResult(D, jnp.asarray(it, jnp.int32),
-                      jnp.asarray(sum(generated), jnp.int64))
+                      jnp.asarray(total_gen, GEN_DTYPE))
     probe = FixpointProbe(
         repr=repr_name, iterations=it, frontier_rows=frontier_rows,
         delta_facts=delta_facts, generated=generated,
@@ -146,6 +159,10 @@ def fixpoint_dense_probed(
         raise NotImplementedError(
             f"probed fixpoints cover the serving path (form='vector'); "
             f"got form={form!r}")
+    if not sr.idempotent:
+        raise NotImplementedError(
+            f"the probed twins replicate the masked vector form; the "
+            f"additive {sr.name} carrier runs the accumulate form unprobed")
     if max_iters is None:
         max_iters = 4 * init.shape[-1] + 8
     step = lambda D, mask: _probe_step_dense(sr, arc, D, mask, matmul)
@@ -159,6 +176,11 @@ def fixpoint_csr_probed(
     max_iters: Optional[int] = None,
 ) -> Tuple[DenseResult, FixpointProbe]:
     """Probed twin of ``fixpoint_csr_cached``; result bit-identical."""
+    if not csr.semiring.idempotent:
+        raise NotImplementedError(
+            f"the probed twins replicate the masked vector form; the "
+            f"additive {csr.semiring.name} carrier runs the accumulate "
+            f"form unprobed")
     if max_iters is None:
         max_iters = 4 * init.shape[-1] + 8
     step = lambda D, mask: _probe_step_csr(csr, D, mask, spmv)

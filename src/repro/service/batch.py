@@ -23,7 +23,9 @@ import numpy as np
 
 from ..core import sparse as _sparse
 from ..core.semiring import Semiring
-from ..core.seminaive import DenseResult, fixpoint_dense_cached
+from ..core.seminaive import (DenseResult, additive_max_iters,
+                              check_additive_converged,
+                              fixpoint_dense_cached)
 from ..obs.fixpoint_probe import fixpoint_csr_probed, fixpoint_dense_probed
 
 
@@ -91,6 +93,19 @@ def run_frontier_batch(
     elif bp > b:  # caller-built seed (append-resume): B = cache occupancy
         fill = jnp.full((bp - b, matrix.shape[1]), sr.zero, matrix.dtype)
         init = jnp.concatenate([init, fill])
+    if not sr.idempotent:
+        # additive ⊕ (plus-times counting) has no masked vector form: the
+        # accumulate fixpoint sums init·Aᵏ over path lengths, bounded by the
+        # acyclicity iteration budget — hitting it raises
+        # FixpointDivergenceError instead of serving a truncated count.
+        # The sharded and probed twins are vector-form only, so additive
+        # batches run the plain cached fixpoint (probe reports None).
+        if max_iters is None:
+            max_iters = additive_max_iters(matrix.shape[-1])
+        res = fixpoint_dense_cached(sr, matrix, init, form="accumulate",
+                                    matmul=matmul, max_iters=max_iters)
+        res = check_additive_converged(res, max_iters, "additive dense batch")
+        return (res, None) if probe else res
     if mesh is not None:
         closed, iters = _sharded(mesh, sr, matrix, init, matmul, max_iters)
         res = DenseResult(closed, iters, jnp.int64(0))
@@ -146,6 +161,16 @@ def run_frontier_batch_csr(
     elif bp > b:
         fill = jnp.full((bp - b, init.shape[1]), sr.zero, init.dtype)
         init = jnp.concatenate([init, fill])
+    if not sr.idempotent:
+        # additive CSR: fixpoint_csr routes non-idempotent carriers to its
+        # accumulate branch internally; guard the iteration budget here so a
+        # cyclic graph raises instead of truncating (see the dense twin)
+        if max_iters is None:
+            max_iters = additive_max_iters(csr.n_alloc)
+        res = _sparse.fixpoint_csr_cached(csr, init, spmv=spmv,
+                                          max_iters=max_iters)
+        res = check_additive_converged(res, max_iters, "additive CSR batch")
+        return (res, None) if probe else res
     if mesh is not None:
         from ..core.distributed import csr_frontier_decomposable
         closed, iters = csr_frontier_decomposable(mesh, csr, init, spmv=spmv,
@@ -177,3 +202,28 @@ def format_minplus_row(src: int, row, n: int) -> tuple[np.ndarray, np.ndarray]:
     rows = np.stack([np.full(len(dst), src, np.int64), dst.astype(np.int64)],
                     axis=1)
     return rows, d[dst].astype(np.int64)
+
+
+def format_maxplus_row(src: int, row, n: int) -> tuple[np.ndarray, np.ndarray]:
+    """(n_alloc,) float32 longest-path row -> ((k, 2) rows, (k,) int64).
+
+    Same finite mask as the min-plus formatter — the max-plus ⊕-zero is
+    -inf, equally non-finite — kept as its own entry point so the carrier
+    table stays one-kind-one-formatter."""
+    return format_minplus_row(src, row, n)
+
+
+def format_plustimes_row(src: int, row, n: int
+                         ) -> tuple[np.ndarray, np.ndarray]:
+    """(n_alloc,) float32 count/sum row -> ((k, 2) rows, (k,) int64 values).
+
+    The additive ⊕-zero is 0.0, so non-zero entries are the destinations
+    with at least one path.  Values round to int64 — the engine's packed
+    domain is integral, and f32 keeps integer totals exact to 2^24."""
+    d = np.asarray(row[:n])
+    dst = np.nonzero(d != 0.0)[0]
+    if not len(dst):
+        return np.zeros((0, 2), np.int64), np.zeros((0,), np.int64)
+    rows = np.stack([np.full(len(dst), src, np.int64), dst.astype(np.int64)],
+                    axis=1)
+    return rows, np.rint(d[dst]).astype(np.int64)

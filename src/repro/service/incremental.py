@@ -56,8 +56,50 @@ def resume_init(sr: Semiring, prev_rows: jax.Array,
     closure rows and the post-append frontier rows (``matrix[srcs]``) for the
     same B sources.  Feed the result to ``batch.run_frontier_batch(init=...)``
     so resume and cold batches share one dispatch (and its compilations).
+
+    Idempotent carriers only: for additive ⊕ the re-entered fixpoint would
+    re-derive (and re-count) every already-counted path — use
+    :func:`replay_init` instead.
     """
+    if not sr.idempotent:
+        raise ValueError(
+            f"resume_init is unsound for the non-idempotent {sr.name} "
+            "carrier (re-entering from prev ⊕ seed double-counts); build "
+            "the resume seed with replay_init and add prev to the closure")
     return sr.add(prev_rows, seed_rows)
+
+
+def replay_init(sr: Semiring, prev_rows: jax.Array, srcs,
+                delta_rows: np.ndarray, n_alloc: int) -> jax.Array:
+    """Additive (count/sum) append-resume seed: first-new-arc decomposition.
+
+    Every path that uses at least one appended arc decomposes *uniquely* as
+    an old-arcs-only prefix from the source, its FIRST appended arc, and an
+    arbitrary suffix in the post-append graph.  So with Δ the appended arcs,
+
+        init0[q, b] = Σ_{(a, b, w) ∈ Δ} (1[a = src_q] ⊕ prev[q, a]) ⊗ w
+        T           = Σ_{k ≥ 0} init0 · A'ᵏ      (accumulate-form fixpoint)
+
+    counts exactly the new paths, and ``prev ⊕ T`` is the post-append total.
+    This builds ``init0``; feed it to ``run_frontier_batch*(init=...)`` and
+    add ``prev`` back onto the first B rows of the result.
+
+    ``delta_rows`` must hold the *genuinely new* (m, 3) arcs only — exact
+    duplicates of resident facts re-derive nothing under set semantics, so
+    the caller pre-filters them (``_DenseRelation.append``); passing an
+    already-counted arc here double-counts its paths.
+    """
+    b_rows = prev_rows.shape[0]
+    # the empty prefix: a Δ arc leaving src_q itself starts a path of its own
+    base = prev_rows.at[jnp.arange(b_rows), jnp.asarray(srcs)].add(
+        jnp.asarray(sr.one, prev_rows.dtype))
+    a = jnp.asarray(np.asarray(delta_rows[:, 0], np.int64))
+    d = np.asarray(delta_rows[:, 1], np.int64)
+    w = jnp.asarray(np.asarray(delta_rows[:, 2]), prev_rows.dtype)
+    contrib = sr.mul(base[:, a], w[None, :])  # (B, m): prefix ⊗ first arc
+    init0 = jnp.zeros((b_rows, n_alloc), prev_rows.dtype)
+    # scatter-⊕ over arc heads (additive ⊕ is +, the only non-idempotent ⊕)
+    return init0.at[:, jnp.asarray(d)].add(contrib)
 
 
 def pad_rows(rows: jax.Array, n_alloc: int, zero) -> jax.Array:

@@ -39,12 +39,18 @@ tc(X,Y) <- tc(X,Z), arc(Z,Y).
 
 
 def _synthetic(spec: str) -> np.ndarray:
-    """gnp:N:P | grid:N | tree:H | paths:COUNT:LEN -> 'arc' edge list."""
-    from ..data.graphs import gnp_graph, grid_graph, tree_graph
+    """gnp:N:P | dag:N:P:W | grid:N | tree:H | paths:COUNT:LEN -> 'arc'
+    edge list (``dag`` rows carry a weight column for counting / min-plus /
+    max-plus programs; the others are unweighted)."""
+    from ..data.graphs import dag_graph, gnp_graph, grid_graph, tree_graph
 
     kind, *args = spec.split(":")
     if kind == "gnp":
         return gnp_graph(int(args[0]), float(args[1]) if len(args) > 1 else 0.001)
+    if kind == "dag":
+        return dag_graph(int(args[0]),
+                         float(args[1]) if len(args) > 1 else 0.01,
+                         max_w=int(args[2]) if len(args) > 2 else 1)
     if kind == "grid":
         return grid_graph(int(args[0]))
     if kind == "tree":
@@ -127,8 +133,10 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--edb", action="append", default=[],
                     metavar="NAME=FILE.csv", help="load a relation from CSV")
     ap.add_argument("--synthetic", metavar="FAMILY:ARGS",
-                    help="synthetic 'arc' relation: gnp:N[:P] | grid:N | "
-                         "tree:H | paths:COUNT[:LEN]")
+                    help="synthetic 'arc' relation: gnp:N[:P] | "
+                         "dag:N[:P][:W] (weighted, acyclic — counting/"
+                         "max-plus programs) | grid:N | tree:H | "
+                         "paths:COUNT[:LEN]")
     ap.add_argument("--query", dest="actions", action="append",
                     type=lambda s: ("query", s), metavar="'tc(1, X)'")
     ap.add_argument("--append", dest="actions", action="append",

@@ -48,7 +48,7 @@ from ..core.magic import (BOUND, FrontierLowering, MagicError, agg_positions,
 from ..core.magic import rewrite as magic_rewrite
 from ..core.parser import parse_program
 from ..core.planner import PlanError, demanded_strata
-from ..core.semiring import BOOL, MIN_PLUS
+from ..core.semiring import MIN_PLUS, carrier_for, edge_arity
 from ..obs.metrics import NULL_METRICS, MetricsRegistry
 from ..obs.roofline_attr import (KernelAttribution, csr_launch_cost,
                                  dense_launch_cost)
@@ -129,7 +129,10 @@ class _DenseRelation:
 
     def __init__(self, svc: "DatalogService", low: FrontierLowering):
         self.low = low
-        self.sr = BOOL if low.kind == "bool" else MIN_PLUS
+        # the carrier-misrouting bug lived here: `BOOL if bool else MIN_PLUS`
+        # silently ran max-plus and plus-times lowerings on the min-plus
+        # semiring.  Route through the typed table instead.
+        self.sr = carrier_for(low.kind)
         self.n = 0
         self.n_alloc = 0
         self.matrix = None
@@ -146,8 +149,16 @@ class _DenseRelation:
     def _rebuild(self, svc: "DatalogService"):
         prev = None if (self.matrix is None and self.csr is None) else \
             ("csr" if self.is_csr else "dense")
-        arity = 2 if self.low.kind == "bool" else 3
+        arity = edge_arity(self.low.kind)
         edges = svc.db.get(self.low.edb, np.zeros((0, arity), np.int64))
+        if not self.sr.idempotent:
+            # additive ⊕ is set-semantics over arcs: exact duplicate facts
+            # collapse before they can double-count, and the distinct-arc
+            # set filters appends so the increment replay's Δ-disjointness
+            # invariant (only genuinely-new arcs re-derive) holds
+            if len(edges):
+                edges = np.unique(edges, axis=0)
+            self._edges = {tuple(r) for r in edges.tolist()}
         n = int(edges[:, :2].max()) + 1 if len(edges) else 0
         align = svc.n_align
         self.n = n
@@ -174,11 +185,18 @@ class _DenseRelation:
                 adj[edges[:, 0], edges[:, 1]] = True
             self.matrix = jnp.asarray(adj)
         else:
+            # weighted dense matrix in the carrier: ⊕-zero fill (+inf for
+            # min-plus, -inf for max-plus, 0 for plus-times) and the ⊕
+            # scatter folds parallel arcs (min/max for the idempotent
+            # carriers; additive arcs already deduped above, so += sums
+            # distinct parallel arcs exactly once each)
             self.csr = None
-            w = np.full((self.n_alloc, self.n_alloc), np.inf, np.float32)
+            w = np.full((self.n_alloc, self.n_alloc), self.sr.zero, np.float32)
             if len(edges):
-                np.minimum.at(w, (edges[:, 0], edges[:, 1]),
-                              edges[:, 2].astype(np.float32))
+                scatter = (np.minimum if self.sr is MIN_PLUS
+                           else np.maximum if self.sr.idempotent else np.add)
+                scatter.at(w, (edges[:, 0], edges[:, 1]),
+                           edges[:, 2].astype(np.float32))
             self.matrix = jnp.asarray(w)
         now = "csr" if use_csr else "dense"
         if prev is not None and prev != now:
@@ -214,12 +232,24 @@ class _DenseRelation:
 
     def append(self, svc: "DatalogService", rows: np.ndarray) -> bool:
         """Fold appended arcs in; returns True when the domain outgrew the
-        allocation (a rebuild — cached rows need re-padding)."""
+        allocation (a rebuild — cached rows need re-padding).
+
+        For additive carriers the rows are first filtered down to the
+        *genuinely new* arcs (set semantics: exact duplicates of resident
+        facts re-derive nothing) and the filtered Δ lands on
+        :attr:`last_delta` — the increment-replay seed of
+        ``DatalogService._refresh_dense`` depends on Δ being disjoint from
+        the pre-append arc set."""
+        if not self.sr.idempotent:
+            rows = self._new_arcs(rows)
+        self.last_delta = rows
         new_n = max(self.n, int(rows[:, :2].max()) + 1 if len(rows) else 0)
         if new_n > self.n_alloc:
             self._rebuild(svc)  # svc.db already holds the appended relation
             return True
         self.n = new_n
+        if not self.sr.idempotent:
+            self._edges.update(map(tuple, rows.tolist()))
         if len(rows):
             if self.is_csr:
                 if _sparse.tail_will_rebuild(self.csr, len(rows),
@@ -236,9 +266,21 @@ class _DenseRelation:
             elif self.low.kind == "bool":
                 self.matrix = self.matrix.at[rows[:, 0], rows[:, 1]].set(True)
             else:
-                self.matrix = self.matrix.at[rows[:, 0], rows[:, 1]].min(
-                    jnp.asarray(rows[:, 2], jnp.float32))
+                vals = jnp.asarray(rows[:, 2], jnp.float32)
+                at = self.matrix.at[rows[:, 0], rows[:, 1]]
+                self.matrix = (at.min(vals) if self.sr is MIN_PLUS
+                               else at.max(vals) if self.sr.idempotent
+                               else at.add(vals))
         return False
+
+    def _new_arcs(self, rows: np.ndarray) -> np.ndarray:
+        """Set-semantics append filter for additive carriers: collapse exact
+        duplicates within the batch, then drop arcs already resident."""
+        if not len(rows):
+            return np.asarray(rows, np.int64).reshape(0, 3)
+        uniq = np.unique(np.asarray(rows, np.int64), axis=0)
+        keep = [tuple(r) not in self._edges for r in uniq.tolist()]
+        return uniq[np.asarray(keep, bool)]
 
 
 class _QueryTemplate:
@@ -744,7 +786,11 @@ class DatalogService:
                     f"{rel!r} is not an EDB relation of this service "
                     f"(known: {sorted(self.db)}); appends are EDB-only")
             rows = _inc.validate_append(rows, self.db[rel].shape[1], self.bits)
-            self.db[rel] = np.concatenate([self.db[rel], rows], axis=0)
+            # EDB relations stay SETS under appends (Engine normalization
+            # dedupes at build; re-appended duplicates must not double-count
+            # additive aggregate bindings on the next tuple evaluation)
+            self.db[rel] = np.unique(
+                np.concatenate([self.db[rel], rows], axis=0), axis=0)
             self.epoch += 1
             self.stats.appends += 1
             self._base.invalidate(rel)
@@ -1034,6 +1080,10 @@ class DatalogService:
     def _format(self, ds: _DenseRelation, src: int, row):
         if ds.low.kind == "bool":
             return _batch.format_bool_row(src, row, ds.n)
+        if ds.low.kind == "plustimes":
+            return _batch.format_plustimes_row(src, row, ds.n)
+        if ds.low.kind == "maxplus":
+            return _batch.format_maxplus_row(src, row, ds.n)
         return _batch.format_minplus_row(src, row, ds.n)
 
     def _entry_result(self, ent: CacheEntry):
@@ -1069,7 +1119,7 @@ class DatalogService:
 
     def _cache_dense(self, pred: str, src: int, formatted, raw):
         low = self._lowering(pred)
-        arity = 2 if low.kind == "bool" else 3
+        arity = edge_arity(low.kind)
         # the canonical single-source pattern key: distinct free tail vars
         key = (pred, src) + tuple(f"~{i}" for i in range(1, arity))
         self.cache.put(key, CacheEntry("dense", pred, _freeze(formatted),
@@ -1091,11 +1141,27 @@ class DatalogService:
         prev = jnp.stack([e.raw for _, e in entries])
         if grown:
             prev = _inc.pad_rows(prev, ds.n_alloc, ds.sr.zero)
-        seed = ds.seed_rows(srcs)
-        table = ds.run_batch(self, srcs,
-                             init=_inc.resume_init(ds.sr, prev, seed)).table
-        self.stats.dense_fixpoints += 1
-        self.stats.csr_fixpoints += 1 if ds.is_csr else 0
+        if ds.sr.idempotent:
+            seed = ds.seed_rows(srcs)
+            table = ds.run_batch(self, srcs,
+                                 init=_inc.resume_init(ds.sr, prev, seed)).table
+        elif not len(ds.last_delta):
+            # additive, nothing genuinely new (exact-duplicate appends):
+            # set semantics says every total is unchanged — revalidate only
+            table = prev
+        else:
+            # additive ⊕ cannot re-enter from prev ⊕ seed (already-counted
+            # paths would double-count): replay the increment instead — the
+            # accumulate fixpoint from the first-new-arc seed counts exactly
+            # the paths that use an appended arc, and prev ⊕ that closure is
+            # the post-append total (``incremental.replay_init``)
+            init0 = _inc.replay_init(ds.sr, prev, srcs, ds.last_delta,
+                                     ds.n_alloc)
+            t = ds.run_batch(self, srcs, init=init0).table
+            table = prev + t[:len(srcs)]
+        if ds.sr.idempotent or len(ds.last_delta):
+            self.stats.dense_fixpoints += 1
+            self.stats.csr_fixpoints += 1 if ds.is_csr else 0
         self.stats.resumed_rows += len(entries)
         for j, (key, e) in enumerate(entries):
             # result=None defers answer formatting to the entry's next hit —

@@ -8,9 +8,12 @@ point: every optimized evaluation path in the engine/service must agree with
 this one on randomly generated programs, EDBs and queries.
 
 Scope (matches the generators): positive literals, negation over *EDB*
-relations only, comparisons, ``+``/``-`` arithmetic, and ``min``/``max``
-head aggregates with eager lattice merge (the PreM-transferred semantics).
-Additive aggregates (count/sum) are out of scope here.
+relations only, comparisons, ``+``/``-``/``*`` arithmetic, ``min``/``max``
+head aggregates with eager lattice merge (the PreM-transferred semantics),
+and additive ``count``/``sum``/``mcount``/``msum`` aggregates evaluated by
+per-stratum Jacobi recompute: every pass re-derives each group's total from
+the whole current model, converging on the acyclic programs the generators
+emit (the engine's delta-increment semantics reach the same fixpoint).
 
 The model maps each predicate to a set of full literal-position tuples
 (aggregate values sit at their literal position).  ``ref_answer`` filters a
@@ -62,7 +65,8 @@ def _bindings(body, model, env):
                 yield from _bindings(rest, model, env2)
     elif isinstance(g, Arith):
         l, r = _val(g.lhs, env), _val(g.rhs, env)
-        res = l + r if g.op == "+" else l - r
+        res = (l + r if g.op == "+" else
+               l * r if g.op == "*" else l - r)
         if g.target.name in env:
             if env[g.target.name] == res:
                 yield from _bindings(rest, model, env)
@@ -81,6 +85,23 @@ def _bindings(body, model, env):
         raise TypeError(g)
 
 
+_ADDITIVE_AGGS = ("count", "sum", "mcount", "msum")
+
+
+def _swap_agg_fact(model, aggs, pred, key, new, changed):
+    """Replace a group's aggregate fact in the model with its new value."""
+    pos = key.index(None)
+    old = aggs.get((pred, key))
+    if new == old:
+        return changed
+    aggs[(pred, key)] = new
+    ms = model.setdefault(pred, set())
+    if old is not None:
+        ms.discard(key[:pos] + (old,) + key[pos + 1:])
+    ms.add(key[:pos] + (new,) + key[pos + 1:])
+    return True
+
+
 def ref_model(program, db):
     """Naive fixpoint: {pred: set of full literal-position tuples}."""
     if isinstance(program, str):
@@ -88,11 +109,15 @@ def ref_model(program, db):
     model = {rel: {tuple(map(int, row)) for row in rows}
              for rel, rows in db.items()}
     aggs = {}  # (pred, group key incl. None at agg pos) -> merged value
+    additive = [r for r in program.rules
+                if r.agg is not None and r.agg.kind in _ADDITIVE_AGGS]
     changed = True
     while changed:
         changed = False
         for rule in program.rules:
             head, agg = rule.head, rule.agg
+            if agg is not None and agg.kind in _ADDITIVE_AGGS:
+                continue  # recomputed wholesale below
             for env in list(_bindings(list(rule.body), model, {})):
                 tup = tuple(_val(a, env) for a in head.args)
                 if agg is None:
@@ -105,14 +130,24 @@ def ref_model(program, db):
                 new = tup[agg.position] if old is None else (
                     min(old, tup[agg.position]) if agg.kind == "min"
                     else max(old, tup[agg.position]))
-                if new != old:
-                    aggs[(head.pred, key)] = new
-                    ms = model.setdefault(head.pred, set())
-                    if old is not None:
-                        ms.discard(key[:agg.position] + (old,)
-                                   + key[agg.position + 1:])
-                    ms.add(key[:agg.position] + (new,) + key[agg.position + 1:])
-                    changed = True
+                changed = _swap_agg_fact(model, aggs, head.pred, key, new,
+                                         changed)
+        # additive aggregates: Jacobi recompute — every group total is
+        # re-derived from the whole current model each pass.  Each distinct
+        # body binding contributes once (count: 1, sum: the witness value);
+        # converges exactly on acyclic programs, which is all the generators
+        # emit for additive ⊕ (the termination guard of the fast path).
+        groups = {}
+        for rule in additive:
+            head, agg = rule.head, rule.agg
+            for env in _bindings(list(rule.body), model, {}):
+                tup = tuple(_val(a, env) for a in head.args)
+                key = tup[:agg.position] + (None,) + tup[agg.position + 1:]
+                inc = 1 if agg.kind in ("count", "mcount") \
+                    else tup[agg.position]
+                groups[(head.pred, key)] = groups.get((head.pred, key), 0) + inc
+        for (pred, key), new in groups.items():
+            changed = _swap_agg_fact(model, aggs, pred, key, new, changed)
     return model
 
 
@@ -146,6 +181,25 @@ def ref_distances(edges, src: int) -> dict:
                 dist[b] = dist[a] + w
                 changed = True
     return dist
+
+
+def ref_path_counts(edges, src: int) -> dict:
+    """Oracle for single-source weighted path counts over (m, 3) arcs on a
+    DAG: d[y] = Σ over paths src→y of Π arc weights (all-ones weights give
+    the number of distinct paths).  Jacobi iteration over Python dicts —
+    diverges on cyclic inputs, mirroring the additive carrier's semantics."""
+    rows = [(int(a), int(b), int(w)) for a, b, w in edges]
+    src, d = int(src), {}
+    while True:
+        new = {}
+        for a, b, w in rows:
+            if a == src:
+                new[b] = new.get(b, 0) + w
+            if a in d:
+                new[b] = new.get(b, 0) + d[a] * w
+        if new == d:
+            return d
+        d = new
 
 
 def ref_answer(model, q: Literal) -> set:

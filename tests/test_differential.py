@@ -24,11 +24,24 @@ fixpoint over Python sets — on TEN evaluation paths:
                                  probed fixpoint twins and span recording
                                  must be bit-identical to the plain dense
                                  service, and re-serving a warm batch must
-                                 not retrace any fixpoint)
+                                 not retrace any fixpoint; additive batches
+                                 run unprobed — the gate must not perturb
+                                 answers)
  10. tuned-kernel serving        (a pinned ``KernelConfig(use_kernel=True)``
                                  forces sliced-ELL + the Pallas tile-skip
                                  kernels on every CSR relation; answers must
                                  be bit-identical to the dense service's)
+ 11. counting fast path          (additive shapes only: the dense and CSR
+                                 single-source count/sum closures equal the
+                                 graph-level path-count oracle
+                                 (``ref_path_counts``) exactly — integer
+                                 counts compare exactly, never fp-tolerant)
+
+The count/sum (``cpath``/``spath``) and max-plus (``lpath``) shapes draw
+*acyclic* EDBs (arcs with src < dst): the additive (+,×) carrier has no
+finite fixpoint on cycles — the serving path raises
+``FixpointDivergenceError`` there by design — and the naive reference's
+Jacobi recompute would not terminate either.
 
 Case count defaults to a CI-smoke size; ``DIFF_CASES=200 pytest
 tests/test_differential.py`` runs the acceptance-sized sweep (the generator
@@ -44,7 +57,7 @@ import threading
 import numpy as np
 import pytest
 from _hypothesis_stub import HAVE_HYPOTHESIS, given, settings, st
-from _reference import ref_answer, ref_model
+from _reference import ref_answer, ref_model, ref_path_counts
 
 from repro.core.engine import Engine
 from repro.core.ir import Const, Literal, Var
@@ -67,10 +80,20 @@ SHAPES = {
     "dpath": ("dpath(X,Z,min<D>) <- w(X,Z,D).\n"
               "dpath(X,Z,min<D>) <- dpath(X,Y,D1), w(Y,Z,D2), D = D1 + D2.",
               ["dpath"], ("w",)),
+    # additive carriers: count/sum-in-recursion (plus-times) and longest
+    # paths (max-plus), over the acyclic EDB relation "d" (src < dst)
+    "cpath": ("cpath(X,Z,sum<C>) <- d(X,Z,C).\n"
+              "cpath(X,Z,sum<C>) <- cpath(X,Y,C1), d(Y,Z,C2), C = C1 * C2.",
+              ["cpath"], ("d",)),
+    "lpath": ("lpath(X,Z,max<D>) <- d(X,Z,D).\n"
+              "lpath(X,Z,max<D>) <- lpath(X,Y,D1), d(Y,Z,D2), D = D1 + D2.",
+              ["lpath"], ("d",)),
 }
 N = 7  # vertex domain [0, N); small keeps the naive reference fast
-ARITY = {"tc": 2, "sg": 2, "p": 2, "q": 2, "dpath": 3}
-AGG_POS = {"dpath": 2}
+ARITY = {"tc": 2, "sg": 2, "p": 2, "q": 2, "dpath": 3, "cpath": 3,
+         "lpath": 3}
+AGG_POS = {"dpath": 2, "cpath": 2, "lpath": 2}
+ADDITIVE_SHAPES = ("cpath",)  # shapes whose fast path runs accumulate form
 
 
 def gen_case(case: int):
@@ -83,7 +106,14 @@ def gen_case(case: int):
     # sweep exercises many programs against few compiled fixpoint shapes
     n_edges = 12
     for rel in rels:
-        if rel == "w":
+        if rel == "d":
+            # acyclic weighted arcs (src < dst); duplicates stay in — set
+            # semantics must collapse them identically on every path
+            rows = []
+            for _ in range(n_edges):
+                a, b = sorted(rng.sample(range(N), 2))
+                rows.append([a, b, rng.randint(1, 3)])
+        elif rel == "w":
             rows = [[rng.randrange(N), rng.randrange(N), rng.randint(1, 6)]
                     for _ in range(n_edges)]
         else:
@@ -174,6 +204,23 @@ def test_differential(case):
                         got if isinstance(got, tuple) else (got,)):
             assert np.array_equal(a, b), \
                 f"case={case} query={queries[i]!r}: dense/CSR not bit-identical"
+
+    # 11. counting fast path: additive shapes' single-source closures (the
+    # dense accumulate fixpoint AND its CSR twin) against the graph-level
+    # path-count oracle — exact integer comparison, no fp tolerance.  The
+    # oracle sums Π-of-weights over distinct paths, which is exactly the
+    # Datalog sum-aggregate fixpoint on the deduped arc set.
+    if shape in ADDITIVE_SHAPES:
+        arcs = np.unique(db["d"], axis=0)  # set semantics, like every path
+        for svc_c, name in ((svc, "service-counting"),
+                            (svc_csr, "service-counting-csr")):
+            for s in range(N):
+                counts = ref_path_counts(arcs, s)
+                rows, vals = svc_c.ask(SHAPES[shape][1][0], (s, None, None))
+                got = {int(r[1]): int(v) for r, v in zip(rows, vals)}
+                assert got == counts, (
+                    f"path={name} case={case} src={s}: got {got} "
+                    f"want {counts}")
 
     # 10. tuned-kernel serving: a pinned KernelConfig (no measurement) forces
     # the sliced-ELL layout + Pallas tile-skip kernels on every CSR relation;

@@ -317,3 +317,89 @@ def test_autotune_pinned_and_measured():
         "analytic seed should prune at least one candidate"
     res2 = at.autotune(edges, 256, "bool", include_kernels=False)
     assert res2.cached and res2.config == res.config
+
+
+# ---------------------------------------------------------------------------
+# additive (plus-times) and max-plus carriers (ROADMAP item 4)
+# ---------------------------------------------------------------------------
+
+
+def _rand_weighted_csr(n, p, kind, seed=0, acyclic=False):
+    from repro.core.sparse import build_csr
+    rng = np.random.default_rng(seed)
+    mask = rng.random((n, n)) < p
+    np.fill_diagonal(mask, False)
+    if acyclic:
+        mask = np.triu(mask, k=1)
+    src, dst = np.nonzero(mask)
+    edges = np.stack([src, dst, rng.integers(1, 5, len(src))],
+                     axis=1).astype(np.int64)
+    return build_csr(edges, n, kind), edges
+
+
+@given(st.sampled_from([1, 3, 8]), st.sampled_from([64, 100]),
+       st.sampled_from([0.02, 0.1]))
+@settings(max_examples=6, deadline=None)
+def test_csr_plustimes_spmv_vs_dense(b, n, p):
+    """Segment-SUM over packed arcs == dense f32 matmul.  Integer-valued
+    weights/frontiers keep every partial sum exact in f32, so the equality
+    is bitwise regardless of reduction order (sentinel pads carry 0 and
+    contribute nothing)."""
+    csr, edges = _rand_weighted_csr(n, p, "plustimes", seed=n + b)
+    w = np.zeros((n, n), np.float32)
+    np.add.at(w, (edges[:, 0], edges[:, 1]), edges[:, 2].astype(np.float32))
+    f = np.where(RNG.random((b, n)) < 0.3,
+                 RNG.integers(1, 5, (b, n)), 0).astype(np.float32)
+    want = jnp.matmul(jnp.asarray(f), jnp.asarray(w))
+    got = ops.csr_plustimes(jnp.asarray(f), csr.src_idx, csr.col_idx,
+                            csr.edge_val)
+    assert jnp.array_equal(got, want)
+
+
+@given(st.sampled_from([1, 3, 8]), st.sampled_from([64, 100]),
+       st.sampled_from([0.02, 0.1]))
+@settings(max_examples=6, deadline=None)
+def test_csr_maxplus_spmv_vs_dense(b, n, p):
+    """Segment-MAX over packed arcs == the dense max-plus product (the
+    min-plus kernel reflected through negation; -inf sentinels never win)."""
+    csr, edges = _rand_weighted_csr(n, p, "maxplus", seed=n + b)
+    w = np.full((n, n), -np.inf, np.float32)
+    np.maximum.at(w, (edges[:, 0], edges[:, 1]), edges[:, 2].astype(np.float32))
+    f = np.asarray(-rand_dist(b, n, 0.3))  # finite entries > -inf
+    want = -ref.minplus_ref(jnp.asarray(-f), jnp.asarray(-w))
+    got = ops.csr_maxplus(jnp.asarray(f), csr.src_idx, csr.col_idx,
+                          csr.edge_val)
+    assert jnp.array_equal(got, want)
+
+
+def test_csr_weighted_kernel_steps_match_jnp_segment_path():
+    """``csr_frontier_step('plustimes'|'maxplus')`` (Pallas) agrees with the
+    jnp sliced-ELL oracle steps in ``core.sparse`` — spine AND COO tail."""
+    from repro.core import sparse
+    csr, _ = _rand_weighted_csr(96, 0.05, "plustimes", seed=5, acyclic=True)
+    csr = sparse.csr_append(csr, np.array([[0, 95, 2], [3, 95, 1]], np.int64))
+    assert int(csr.tail_nnz) > 0
+    f = np.where(RNG.random((4, 96)) < 0.3,
+                 RNG.integers(1, 5, (4, 96)), 0).astype(np.float32)
+    assert jnp.array_equal(ops.csr_frontier_step("plustimes")(jnp.asarray(f), csr),
+                           sparse.csr_frontier_sum(jnp.asarray(f), csr))
+    csr_m, _ = _rand_weighted_csr(96, 0.05, "maxplus", seed=6)
+    fm = jnp.asarray(np.asarray(-rand_dist(4, 96, 0.3)))
+    assert jnp.array_equal(ops.csr_frontier_step("maxplus")(fm, csr_m),
+                           sparse.csr_frontier_max(fm, csr_m))
+
+
+def test_plustimes_kernel_drives_counting_fixpoint():
+    """The one-hot MXU plus-times step is a drop-in spmv for the accumulate-
+    form CSR fixpoint and matches the dense counting closure exactly."""
+    from repro.core import sparse
+    from repro.core.seminaive import counts_batch_dense
+    csr, edges = _rand_weighted_csr(80, 0.06, "plustimes", seed=9,
+                                    acyclic=True)
+    w = np.zeros((80, 80), np.float32)
+    np.add.at(w, (edges[:, 0], edges[:, 1]), edges[:, 2].astype(np.float32))
+    srcs = [0, 7, 40]
+    got = sparse.counts_batch_csr(csr, srcs,
+                                  spmv=ops.csr_frontier_step("plustimes"))
+    want = counts_batch_dense(jnp.asarray(w), srcs)
+    assert jnp.array_equal(got.table[:, :80], want.table[:, :80])

@@ -492,3 +492,81 @@ def test_service_kernel_attribution_in_explain():
         assert k["launches"] >= 1 and k["seconds"] > 0
         assert k["dominant"] in ("compute", "memory")
         assert 0 <= k["frac_peak_flops"] and 0 <= k["frac_peak_bw"]
+
+
+# -- trace-counter race + generated-fact counter dtype regressions ----------
+
+def test_trace_count_thread_hammer_exact():
+    """Regression: ``bump_trace_count`` was a bare ``+=`` on a module global;
+    with traces firing from the admission front-end's dispatcher/finalizer/
+    submitter threads concurrently, updates were lost and ci.sh's warm-batch
+    stability assertions (exact counts) flaked.  Exact totals under a thread
+    hammer prove the lock."""
+    from repro.core import seminaive
+    threads, per = 16, 2000
+    t0 = seminaive.trace_count()
+    gate = threading.Barrier(threads)
+
+    def work():
+        gate.wait()
+        for _ in range(per):
+            seminaive.bump_trace_count()
+
+    ts = [threading.Thread(target=work) for _ in range(threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert seminaive.trace_count() - t0 == threads * per
+
+
+def test_generated_counter_uses_realized_dtype():
+    """Regression: the probe/fixpoint fact counters asked for ``jnp.int64``,
+    which silently realizes as int32 without ``jax_enable_x64`` — so the
+    saturation guard was checking a bound the counter couldn't represent.
+    The counters must carry ``GEN_DTYPE`` (the dtype that actually exists)
+    end to end, and Δ accounting must balance exactly: seed + ΣΔ == final."""
+    import jax.numpy as jnp
+
+    from repro.core.seminaive import GEN_DTYPE, GEN_MAX
+    from repro.obs.fixpoint_probe import fixpoint_dense_probed
+    from repro.core.semiring import BOOL
+
+    assert GEN_MAX == jnp.iinfo(GEN_DTYPE).max  # guard checks the real bound
+    edges = gnp(32, 0.1, seed=2)
+    adj = np.zeros((32, 32), bool)
+    adj[edges[:, 0], edges[:, 1]] = True
+    init = np.zeros((3, 32), bool)
+    init[[0, 1, 2], [0, 5, 9]] = True
+    res, pr = fixpoint_dense_probed(BOOL, jnp.asarray(adj), jnp.asarray(init))
+    assert res.generated.dtype == GEN_DTYPE
+    assert pr.seed_facts + pr.total_delta == pr.final_facts
+    assert 0 <= pr.total_delta < int(GEN_MAX)
+
+
+def test_probed_twins_reject_additive_carriers():
+    """The probed twins replicate the masked vector form; the additive
+    (+,×) carrier runs the accumulate form, so probing it must be a loud
+    NotImplementedError — and probe-mode counting services answer
+    correctly while recording no probes for the additive relation."""
+    import jax.numpy as jnp
+
+    from repro.core.semiring import PLUS_TIMES
+    from repro.core.sparse import build_csr
+    from repro.obs.fixpoint_probe import fixpoint_csr_probed, fixpoint_dense_probed
+
+    edges = np.array([[0, 1, 1], [1, 2, 1], [0, 2, 1]], np.int64)
+    w = np.zeros((8, 8), np.float32)
+    w[edges[:, 0], edges[:, 1]] = 1.0
+    with pytest.raises(NotImplementedError):
+        fixpoint_dense_probed(PLUS_TIMES, jnp.asarray(w), jnp.asarray(w[:1]))
+    with pytest.raises(NotImplementedError):
+        fixpoint_csr_probed(build_csr(edges, 8, "plustimes"),
+                            jnp.zeros((1, 8), jnp.float32))
+    cpath = ("cpath(X,Z,sum<C>) <- d(X,Z,C).\n"
+             "cpath(X,Z,sum<C>) <- cpath(X,Y,C1), d(Y,Z,C2), C = C1 * C2.")
+    svc = DatalogService(cpath, db={"d": edges}, probe=True)
+    rows, vals = svc.ask("cpath", (0, None, None))
+    assert {(int(r[1]), int(v)) for r, v in zip(rows, vals)} == \
+        {(1, 1), (2, 2)}
+    assert not svc.last_probes, "additive batches must run unprobed"

@@ -698,3 +698,86 @@ def test_serve_cli_smoke(capsys):
     # the appended 2->3 links path 0 onto path 1: closure 0->{1,2,3,4,5}
     assert "tc(0, X)  [5 rows]" in out
     assert '"appends": 1' in out
+
+
+# ---------------------------------------------------------------------------
+# carrier routing regressions: max-plus / plus-times on the fast path
+# ---------------------------------------------------------------------------
+
+LPATH = """
+lpath(X,Z,max<D>) <- darc(X,Z,D).
+lpath(X,Z,max<D>) <- lpath(X,Y,D1), darc(Y,Z,D2), D = D1 + D2.
+"""
+
+CPATH = """
+cpath(X,Z,sum<C>) <- darc(X,Z,C).
+cpath(X,Z,sum<C>) <- cpath(X,Y,C1), darc(Y,Z,C2), C = C1 * C2.
+"""
+
+#: a diamond where longest and shortest routes genuinely differ:
+#: 0->3 direct (1), 0->1->3 (2+2=4), 0->1->2->3 (2+1+5=8)
+DIAMOND = np.array([[0, 3, 1], [0, 1, 2], [1, 3, 2],
+                    [1, 2, 1], [2, 3, 5]], np.int64)
+
+
+@pytest.mark.parametrize("force", [False, True], ids=["dense", "csr"])
+def test_maxplus_program_routes_max_carrier(force):
+    """Regression for the carrier-misrouting bug: the dense serving layer
+    hardwired ``BOOL if kind == 'bool' else MIN_PLUS``, so a ``max<D>``
+    program was silently served on the min-plus carrier — longest-path
+    queries returned SHORTEST paths.  The typed carrier table routes by
+    lowering kind; on the diamond the two answers differ (8 vs 1)."""
+    svc = DatalogService(LPATH, db={"darc": DIAMOND}, sparse=force)
+    got = agg_set(svc.ask("lpath", (0, None, None)))
+    assert got == {(0, 1, 2), (0, 2, 3), (0, 3, 8)}
+    assert (0, 3, 8) in got and (0, 3, 1) not in got, \
+        "served the min-plus carrier for a max<> program"
+    assert svc.explain()["relations"]["lpath"]["semiring"] == "max_plus"
+    # the tuple engine (slow path) agrees
+    assert got == agg_set(Engine(LPATH, db={"darc": DIAMOND})
+                          .ask("lpath", (0, None, None)))
+
+
+@pytest.mark.parametrize("force", [False, True], ids=["dense", "csr"])
+def test_counting_program_serves_exact_counts(force):
+    """sum<> programs route to the additive (+,×) carrier and serve exact
+    integer path counts on both representations (diamond: 3 routes 0→3)."""
+    ones = DIAMOND.copy()
+    ones[:, 2] = 1  # unit weights: sums count distinct paths
+    svc = DatalogService(CPATH, db={"darc": ones}, sparse=force)
+    got = agg_set(svc.ask("cpath", (0, None, None)))
+    assert got == {(0, 1, 1), (0, 2, 1), (0, 3, 3)}
+    assert svc.explain()["relations"]["cpath"]["semiring"] == "plus_times"
+    assert got == agg_set(Engine(CPATH, db={"darc": ones})
+                          .ask("cpath", (0, None, None)))
+
+
+def test_duplicate_edb_rows_are_set_semantics():
+    """Regression: EDB relations are SETS of facts.  A duplicated row used
+    to be enumerated twice by the tuple engine's additive aggregates (and
+    double-scattered into the dense carrier) — invisible for bool/min/max,
+    which are duplicate-insensitive, but it doubled counts.  Loading or
+    appending an exact duplicate must change nothing."""
+    ones = DIAMOND.copy()
+    ones[:, 2] = 1
+    dup = np.concatenate([ones, ones[:2], ones[:1]], axis=0)
+    want = {(0, 1, 1), (0, 2, 1), (0, 3, 3)}
+    assert agg_set(Engine(CPATH, db={"darc": dup})
+                   .ask("cpath", (0, None, None))) == want
+    for force in (False, True):
+        svc = DatalogService(CPATH, db={"darc": dup}, sparse=force)
+        assert agg_set(svc.ask("cpath", (0, None, None))) == want
+        svc.append("darc", ones[2:4])  # duplicates again, post-load
+        assert agg_set(svc.ask("cpath", (0, None, None))) == want
+
+
+def test_unknown_lowering_kind_raises_typed_error():
+    """carrier_for / edge_arity reject unknown kinds with CarrierError
+    instead of silently defaulting a carrier (how the misrouting started)."""
+    from repro.core.semiring import CarrierError, carrier_for, edge_arity
+    with pytest.raises(CarrierError):
+        carrier_for("geometric-mean")
+    with pytest.raises(CarrierError):
+        edge_arity("geometric-mean")
+    assert edge_arity("bool") == 2
+    assert {edge_arity(k) for k in ("minplus", "maxplus", "plustimes")} == {3}

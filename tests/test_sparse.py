@@ -437,3 +437,115 @@ def test_sliced_ell_minplus_bit_identity_on_hubs():
         distances_batch_dense(jnp.asarray(w), [0, 1, 2]).table)
     for cfg, got in dists.items():
         assert np.array_equal(got, want), f"ell_cfg={cfg} diverged"
+
+
+# ---------------------------------------------------------------------------
+# additive (plus-times) and max-plus carriers (ROADMAP item 4)
+# ---------------------------------------------------------------------------
+
+CPATH = """
+cpath(X,Z,sum<C>) <- d(X,Z,C).
+cpath(X,Z,sum<C>) <- cpath(X,Y,C1), d(Y,Z,C2), C = C1 * C2.
+"""
+
+
+def rand_dag(n, p, seed=0, max_w=4):
+    """Weighted acyclic arcs src < dst — the regime the additive carrier
+    requires (count/sum-in-recursion has no finite fixpoint on cycles)."""
+    from repro.data.graphs import dag_graph
+    return dag_graph(n, p, seed=seed, max_w=max_w)
+
+
+@pytest.mark.parametrize("p", [0.03, 0.15])
+def test_plustimes_closure_matches_dense(p):
+    """CSR accumulate-form counting == dense accumulate-form counting, and
+    both match the graph oracle exactly (integer counts in f32)."""
+    from _reference import ref_path_counts
+    from repro.core.seminaive import counts_batch_dense
+    n = 72
+    edges = rand_dag(n, p, seed=7)
+    if not len(edges):
+        pytest.skip("empty graph draw")
+    csr = sparse.build_csr(edges, n, "plustimes")
+    w = np.zeros((n, n), np.float32)
+    np.add.at(w, (edges[:, 0], edges[:, 1]), edges[:, 2].astype(np.float32))
+    srcs = [0, 9, 33]
+    want = counts_batch_dense(jnp.asarray(w), srcs)
+    got = sparse.counts_batch_csr(csr, srcs)
+    assert jnp.array_equal(want.table, got.table[:, :n])
+    c = np.asarray(got.table[1])
+    assert ref_path_counts(edges, 9) == \
+        {int(i): int(c[i]) for i in np.nonzero(c[:n])[0]}
+
+
+def test_additive_fixpoint_diverges_on_cycles_csr_and_dense():
+    """The iteration-bound guard: a cyclic EDB raises
+    FixpointDivergenceError from BOTH representations instead of silently
+    saturating the counts."""
+    from repro.core.seminaive import FixpointDivergenceError, counts_batch_dense
+    edges = np.array([[0, 1, 1], [1, 2, 1], [2, 0, 1]], np.int64)  # 3-cycle
+    csr = sparse.build_csr(edges, 8, "plustimes")
+    with pytest.raises(FixpointDivergenceError):
+        sparse.counts_batch_csr(csr, [0])
+    w = np.zeros((8, 8), np.float32)
+    w[edges[:, 0], edges[:, 1]] = edges[:, 2]
+    with pytest.raises(FixpointDivergenceError):
+        counts_batch_dense(jnp.asarray(w), [0])
+
+
+def test_service_counting_append_resume_matches_recompute():
+    """Additive append-resume (increment replay): appending arcs to a served
+    counting relation replays only paths through the new arcs on top of the
+    cached totals — and lands exactly on the from-scratch answer."""
+    edges = rand_dag(96, 0.04, seed=9)
+    new = np.array([[0, 90, 2], [17, 91, 1], [91, 95, 3]], np.int64)
+    qs = [("cpath", (s, None, None)) for s in [0, 5, 17]]
+    for force in (True, False):  # csr and dense carriers
+        svc = DatalogService(CPATH, db={"d": edges}, sparse=force)
+        svc.ask_batch(qs)
+        svc.append("d", new)
+        assert svc.stats.resumed_rows == 3
+        fresh = DatalogService(CPATH, db={"d": np.concatenate([edges, new])},
+                               sparse=force)
+        for got, want in zip(svc.ask_batch(qs), fresh.ask_batch(qs)):
+            g_rows, g_vals = got
+            w_rows, w_vals = want
+            assert np.array_equal(g_rows, w_rows)
+            assert np.array_equal(g_vals, w_vals)
+
+
+def test_service_counting_duplicate_append_is_noop():
+    """Set semantics: re-appending arcs that already exist must not change
+    any count and must not launch a fixpoint (duplicate-only appends are
+    revalidate-only)."""
+    edges = rand_dag(64, 0.06, seed=3)
+    svc = DatalogService(CPATH, db={"d": edges}, sparse=True)
+    before = svc.ask("cpath", (0, None, None))
+    fp0 = svc.stats.dense_fixpoints
+    svc.append("d", edges[:4])  # all duplicates
+    after = svc.ask("cpath", (0, None, None))
+    assert svc.stats.dense_fixpoints == fp0, \
+        "duplicate-only append must not launch a fixpoint"
+    assert np.array_equal(before[0], after[0])
+    assert np.array_equal(before[1], after[1])
+
+
+def test_sliced_ell_plustimes_bit_identity_on_hubs():
+    """Counting closures are bit-identical across ELL ladder configs on a
+    heavy-tailed (hub) DAG — slicing changes the layout, never the sums."""
+    base = _hub_edges(n=64, m=250, seed=7)
+    base = base[base[:, 0] < base[:, 1]]  # orient acyclic: src < dst
+    rng = np.random.default_rng(7)
+    edges = np.concatenate(
+        [base, rng.integers(1, 4, (len(base), 1))], axis=1).astype(np.int64)
+    from repro.core.seminaive import counts_batch_dense
+    counts = {}
+    for ell_cfg in [(1, 0), (1, 1), (4, 2)]:
+        csr = sparse.build_csr(edges, 64, "plustimes", ell_cfg=ell_cfg)
+        counts[ell_cfg] = np.asarray(
+            sparse.counts_batch_csr(csr, [0, 1, 2]).table)[:, :64]
+    w = np.zeros((64, 64), np.float32)
+    np.add.at(w, (edges[:, 0], edges[:, 1]), edges[:, 2].astype(np.float32))
+    want = np.asarray(counts_batch_dense(jnp.asarray(w), [0, 1, 2]).table)
+    for cfg, got in counts.items():
+        assert np.array_equal(got, want), f"ell_cfg={cfg} diverged"
