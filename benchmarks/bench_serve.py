@@ -44,6 +44,16 @@ Workload: single-source TC queries against a >= 10k-edge random digraph
     finalizes (the PR-6 double-buffering, now visible in a timeline).
     ``--trace-out`` / ``--metrics-out`` export that run's artifacts.
 
+  * ``durable``     — ``--durable``: restart time-to-first-answer.  A
+    durable service populated under ``snapshot_every=1`` crashes; a warm
+    restart (``durable_dir=`` recovery) and a cold in-memory rebuild race
+    to the same answer batches, each in a FRESH interpreter (a real
+    restart has a cold jit cache: cold pays compile + fixpoints, warm
+    serves from the restored answer cache and runs no fixpoint).  Then a
+    WAL-suffix crash (snapshot behind; records replayed via
+    append-resume) and a torn-WAL-tail restart must both serve exact
+    answers for everything but the torn append.
+
 Acceptance (ISSUE 2): steady-state B=32 serving >= 5x sequential
 ``Engine.ask`` qps; append-resume beats recompute.
 Acceptance (ISSUE 4): steady-state B=16 tuple-batch >= 3x sequential
@@ -58,6 +68,10 @@ Acceptance (ISSUE 6): under Poisson load on the G1024 TC workload the async
 front-end sustains >= 2.5x the sync one-at-a-time steady qps while p99
 latency stays <= 5x the single-query service time; smoke asserts >= 1.5x
 and flat ``fixpoint_trace_count`` across warm flushes.
+Acceptance (ISSUE 10): warm restart from snapshot+WAL >= 5x faster than
+cold rebuild to first answer on the G1024 TC workload, answers
+bit-identical to the crashed service; torn-tail recovery serves exact
+answers; smoke asserts warm < cold.
 
 Usage:  PYTHONPATH=src python benchmarks/bench_serve.py [--smoke] [--out F]
         ... --sparse   run ONLY the sparse-vs-dense section and merge it
@@ -706,6 +720,206 @@ def bench_obs(smoke: bool, trace_out: str | None = None,
     return rec
 
 
+# child script for the restart race: a REAL restart is a fresh process with
+# a cold jit cache, so each side runs in its own interpreter.  Timing starts
+# after imports (interpreter + jax import cost is common to both) and covers
+# service construction -> last answer of the batch set: the cold side pays
+# engine build + fixpoint compilation + every closure fixpoint; the warm
+# side pays snapshot load + restore + (possibly) WAL replay.
+_DURABLE_CHILD = r"""
+import json, sys, time
+import numpy as np
+cfg = json.loads(sys.argv[1])
+from repro.service import DatalogService
+TC = "tc(X,Y) <- arc(X,Y).\ntc(X,Y) <- tc(X,Z), arc(Z,Y)."
+edb = np.load(cfg["edb"])
+batches = [[("tc", (int(s), None)) for s in bb] for bb in cfg["batches"]]
+kw = {"durable_dir": cfg["durable_dir"]} if cfg.get("durable_dir") else {}
+t0 = time.perf_counter()
+svc = DatalogService(TC, db={"arc": edb}, result_cache=4096, **kw)
+answers = [svc.ask_batch(list(bb)) for bb in batches]
+elapsed = time.perf_counter() - t0
+out = {"seconds": elapsed}
+if cfg.get("durable_dir"):
+    out["recovery"] = svc.explain()["durability"]["recovery"]
+np.savez(cfg["answers"], **{f"b{i}_{j}": np.asarray(a)
+                            for i, bb in enumerate(answers)
+                            for j, a in enumerate(bb)})
+print("RESULT " + json.dumps(out))
+"""
+
+
+def _durable_child(cfg: dict) -> tuple[dict, dict]:
+    """Run one restart (cold or warm) in a fresh interpreter; returns
+    (timing/recovery record, {answer-key: rows})."""
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", _DURABLE_CHILD, json.dumps(cfg)],
+        capture_output=True, text=True, env=env, timeout=1800)
+    if proc.returncode != 0:
+        raise RuntimeError(f"durable child failed:\n{proc.stderr[-2000:]}")
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT ")][-1]
+    with np.load(cfg["answers"]) as z:
+        answers = {k: z[k] for k in z.files}
+    return json.loads(line[len("RESULT "):]), answers
+
+
+def bench_durable(smoke: bool) -> dict:
+    """``--durable``: restart time-to-first-answer, warm vs cold.
+
+    Populate a durable service under the max-durability cadence
+    (``snapshot_every=1``: every append publishes a snapshot, so a crash
+    loses nothing and recovery is pure snapshot restore), crash it, then
+    race two REAL restarts — fresh interpreters, cold jit caches — to the
+    same batches of answers:
+
+    * **cold** — a fresh in-memory service over the final EDB: engine
+      build + fixpoint compilation + every closure recomputed (what every
+      restart cost before the durable layer);
+    * **warm** — ``DatalogService(durable_dir=...)``: snapshot restore
+      into the answer cache; serving then runs NO fixpoint at all, so the
+      compile is skipped along with the compute — the Wisconsin-study
+      point (arXiv 1812.03975) that materialized-state reuse dominates
+      in-memory Datalog cost.
+
+    Warm answers must be bit-identical to the crashed service's; the cold
+    rebuild must agree as sets (its row order is its own).  Two in-process
+    crash scenarios follow: a WAL-suffix crash (snapshot behind, records
+    replayed through append-resume) and a torn WAL tail, both required to
+    serve exact answers.  Acceptance: warm >= 5x cold on the full G1024 TC
+    workload; smoke asserts warm beats cold.
+    """
+    import shutil
+    import tempfile
+
+    if smoke:
+        n, p, b, nb = 128, 0.05, 16, 3
+    else:
+        n, p, b, nb = 1024, 0.01, 32, 4
+    edges = gnp_graph(n, p, seed=11)
+    rng = np.random.default_rng(53)
+    srcs = rng.choice(n, size=b * nb, replace=False)
+    batches = [[("tc", (int(s), None)) for s in srcs[i * b:(i + 1) * b]]
+               for i in range(nb)]
+    rec: dict = {"graph": f"G{n}-p{p}", "edges": int(len(edges)),
+                 "batch": b, "batches": nb, "smoke": smoke}
+    print(f"durable: {rec['graph']}, {rec['edges']} edges, "
+          f"{nb} batches of {b}", flush=True)
+    rows1 = np.asarray([[int(rng.integers(n)), int(rng.integers(n))]
+                        for _ in range(8)], np.int64)
+    rows2 = np.asarray([[int(rng.integers(n)), int(rng.integers(n))]
+                        for _ in range(4)], np.int64)
+    work = tempfile.mkdtemp(prefix="bench_durable_")
+    dur = str(Path(work) / "state")
+    try:
+        # --- populate under snapshot_every=1, then crash -------------------
+        svc = DatalogService(TC, db={"arc": edges}, durable_dir=dur,
+                             snapshot_every=1, result_cache=4096)
+        for q in batches:
+            svc.ask_batch(list(q))
+        svc.append("arc", rows1)
+        svc.append("arc", rows2)  # auto-snapshot covers both appends
+        svc._durable.wait()
+        want = [svc.ask_batch(list(q)) for q in batches]
+        del svc  # crash: no close(), nothing was lost
+
+        genesis = Path(work) / "genesis.npy"
+        final = Path(work) / "final.npy"
+        np.save(genesis, edges)
+        np.save(final,
+                np.unique(np.concatenate([edges, rows1, rows2]), axis=0))
+        src_lists = [[int(s) for s in srcs[i * b:(i + 1) * b]]
+                     for i in range(nb)]
+
+        # --- the race: fresh-process cold rebuild vs warm restart ----------
+        cold_out, cold_ans = _durable_child(
+            {"edb": str(final), "batches": src_lists,
+             "answers": str(Path(work) / "cold.npz")})
+        warm_out, warm_ans = _durable_child(
+            {"edb": str(genesis), "batches": src_lists,
+             "durable_dir": dur,
+             "answers": str(Path(work) / "warm.npz")})
+        assert warm_out["recovery"]["mode"] == "warm", warm_out
+        for i, batch_want in enumerate(want):
+            for j, w in enumerate(batch_want):
+                assert np.array_equal(warm_ans[f"b{i}_{j}"],
+                                      np.asarray(w)), \
+                    "warm restart answers not bit-identical to crashed twin"
+                assert rows_set(cold_ans[f"b{i}_{j}"]) == rows_set(w), \
+                    "cold rebuild disagrees with the crashed twin"
+        t_cold, t_warm = cold_out["seconds"], warm_out["seconds"]
+        rec["cold_first_answer_seconds"] = t_cold
+        rec["warm_first_answer_seconds"] = t_warm
+        rec["warm_speedup"] = t_cold / t_warm
+        rec["recovery"] = warm_out["recovery"]
+        print(f"  cold rebuild : {t_cold:7.2f} s to last answer "
+              "(fresh process: compile + fixpoints)", flush=True)
+        print(f"  warm restart : {t_warm:7.2f} s to last answer "
+              f"({rec['warm_speedup']:.1f}x; snapshot restore, no fixpoint)",
+              flush=True)
+
+        # --- crash with a WAL suffix: replay through append-resume ---------
+        svc = DatalogService(TC, db={"arc": edges}, durable_dir=dur,
+                             result_cache=4096)
+        late = np.asarray([[int(rng.integers(n)), int(rng.integers(n))]
+                           for _ in range(4)], np.int64)
+        svc.append("arc", late)  # WALed, NOT snapshotted
+        want_late = [svc.ask_batch(list(q)) for q in batches]
+        del svc
+        (svc_r, res_r), t_replay = _wall(lambda: (
+            lambda s: (s, [s.ask_batch(list(q)) for q in batches]))(
+            DatalogService(TC, db={"arc": edges}, durable_dir=dur,
+                           result_cache=4096)))
+        rep_r = svc_r.explain()["durability"]["recovery"]
+        assert rep_r["mode"] == "warm" and rep_r["wal_replayed"] >= 1, rep_r
+        for got_b, want_b in zip(res_r, want_late):
+            for g, w in zip(got_b, want_b):
+                assert np.array_equal(np.asarray(g), np.asarray(w)), \
+                    "WAL-suffix recovery answers drifted"
+        rec["wal_suffix"] = {"wal_replayed": rep_r["wal_replayed"],
+                             "seconds": t_replay, "answers_correct": True}
+        print(f"  WAL suffix   : {rep_r['wal_replayed']} records replayed "
+              f"in {t_replay * 1e3:6.1f} ms (in-process), answers exact",
+              flush=True)
+
+        # --- torn WAL tail: lose the last append, stay correct -------------
+        svc_r.append("arc", np.asarray([[0, n - 1]], np.int64))
+        del svc_r  # crash again, then the disk tears the new record
+        wal = Path(dur) / "wal.log"
+        with open(wal, "r+b") as f:
+            f.truncate(wal.stat().st_size - 6)
+        svc_t = DatalogService(TC, db={"arc": edges}, durable_dir=dur,
+                               result_cache=4096)
+        rep_t = svc_t.explain()["durability"]["recovery"]
+        assert rep_t["torn_bytes"] > 0, rep_t
+        for got_b, want_b in zip(
+                [svc_t.ask_batch(list(q)) for q in batches], want_late):
+            for g, w in zip(got_b, want_b):  # pre-torn-append answers
+                assert np.array_equal(np.asarray(g), np.asarray(w)), \
+                    "torn-tail recovery answers drifted"
+        rec["torn_tail"] = {"mode": rep_t["mode"],
+                            "torn_bytes": rep_t["torn_bytes"],
+                            "answers_correct": True}
+        print(f"  torn tail    : {rep_t['torn_bytes']} bytes truncated, "
+              f"recovered {rep_t['mode']}, answers exact", flush=True)
+        svc_t.close()
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+    assert rec["warm_speedup"] > 1.0, \
+        "warm restart must beat cold rebuild to first answer"
+    if not smoke:
+        assert rec["warm_speedup"] >= 5.0, \
+            "acceptance: warm restart >= 5x cold rebuild on G1024 TC"
+    return rec
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -723,6 +937,10 @@ def main():
     ap.add_argument("--obs", action="store_true",
                     help="run only the observability overhead/stage-breakdown"
                          " section and merge it into the existing JSON")
+    ap.add_argument("--durable", action="store_true",
+                    help="run only the durable restart section (warm "
+                         "snapshot+WAL recovery vs cold rebuild, torn-tail "
+                         "correctness) and merge it into the existing JSON")
     ap.add_argument("--trace-out", default=None, metavar="FILE.json",
                     help="with --obs: export the traced async run as a "
                          "Chrome trace_event timeline")
@@ -735,6 +953,7 @@ def main():
     section = ("sparse", bench_sparse) if args.sparse else \
         ("counting", bench_counting) if args.counting else \
         ("async", bench_async) if args.use_async else \
+        ("durable", bench_durable) if args.durable else \
         ("obs", lambda smoke: bench_obs(
             smoke, trace_out=args.trace_out,
             metrics_out=args.metrics_out)) if args.obs else None
@@ -753,9 +972,9 @@ def main():
     if args.smoke and args.out is None:
         print(json.dumps(rec, indent=2))
         return
-    if out.exists():  # keep already-recorded sparse/counting/async/obs sections
+    if out.exists():  # keep already-recorded per-flag sections
         prev = json.loads(out.read_text())
-        for name in ("sparse", "counting", "async", "obs"):
+        for name in ("sparse", "counting", "async", "obs", "durable"):
             if name in prev:
                 rec[name] = prev[name]
     out.write_text(json.dumps(rec, indent=2))

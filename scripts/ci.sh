@@ -17,7 +17,8 @@ MODULES = [
     "repro.core.semiring", "repro.core.distributed", "repro.core.sparse",
     "repro.service", "repro.service.session", "repro.service.batch",
     "repro.service.incremental", "repro.service.cache", "repro.service.serve",
-    "repro.service.admission",
+    "repro.service.admission", "repro.service.durable",
+    "repro.checkpoint", "repro.checkpoint.store",
     "repro.obs", "repro.obs.trace", "repro.obs.metrics",
     "repro.obs.fixpoint_probe", "repro.obs.roofline_attr",
     "repro.kernels", "repro.kernels.autotune", "repro.data.graphs",
@@ -66,6 +67,12 @@ python benchmarks/bench_serve.py --smoke --counting
 
 echo "== async admission smoke bench (>= 1.5x sync qps + warm-flush trace assert) =="
 python benchmarks/bench_serve.py --smoke --async
+
+echo "== fault-injection recovery suite (durable layer) =="
+python -m pytest -q tests/test_durable.py
+
+echo "== durable restart smoke bench (warm restart beats cold rebuild; torn-write recovery exact) =="
+python benchmarks/bench_serve.py --smoke --durable
 
 echo "== observability smoke bench (metrics-on >= 0.95x metrics-off + exports parse) =="
 python benchmarks/bench_serve.py --smoke --obs \

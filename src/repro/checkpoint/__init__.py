@@ -1,5 +1,7 @@
-from .store import (AsyncCheckpointer, latest_step, load_checkpoint,
-                    save_checkpoint)
+from .store import (AsyncCheckpointer, CheckpointCorrupt,
+                    CheckpointWriteError, complete_steps, latest_step,
+                    load_checkpoint, load_checkpoint_raw, save_checkpoint)
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_step",
-           "AsyncCheckpointer"]
+__all__ = ["save_checkpoint", "load_checkpoint", "load_checkpoint_raw",
+           "latest_step", "complete_steps", "AsyncCheckpointer",
+           "CheckpointCorrupt", "CheckpointWriteError"]

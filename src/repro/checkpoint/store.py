@@ -6,11 +6,19 @@ Layout:  <dir>/step_<N>/shard_<k>.npz  +  manifest.json
   ``n_shards`` files (stand-in for per-host shards on a real cluster);
 * writes go to ``step_<N>.tmp`` and are atomically renamed — a crash mid-write
   never corrupts the latest checkpoint (restore scans for complete manifests);
-* the manifest records paths, shapes, dtypes and per-shard byte sizes
-  (integrity-checked on load);
+* the manifest records paths, shapes, dtypes and per-shard byte sizes *and
+  CRC32s* (integrity-checked on load: a same-size bit flip inside a shard is
+  caught before any array is trusted);
+* ``load_checkpoint``/``load_checkpoint_raw`` degrade instead of dying: when
+  no explicit step is pinned, a corrupt or torn generation falls back to the
+  next-older *complete* one, and only when every generation fails does
+  :class:`CheckpointCorrupt` escape;
 * ``AsyncCheckpointer`` moves serialization off the step loop (a worker
   thread), exactly like production async checkpointing — the driver only
-  blocks if a previous save is still in flight.
+  blocks if a previous save is still in flight.  A failed background save
+  surfaces ONCE as a typed :class:`CheckpointWriteError` on the next
+  ``save()``/``wait()`` and then clears, so one bad write (disk full, perms)
+  does not poison the writer forever.
 """
 from __future__ import annotations
 
@@ -19,6 +27,7 @@ import os
 import queue
 import shutil
 import threading
+import zlib
 from pathlib import Path
 
 import jax
@@ -54,11 +63,12 @@ def save_checkpoint(ckpt_dir: str | Path, step: int, tree, n_shards: int = 4) ->
                 "keys": keys,
                 "shapes": {k: list(flat[k].shape) for k in keys},
                 "dtypes": {k: str(flat[k].dtype) for k in keys},
-                "shard_bytes": []}
+                "shard_bytes": [], "shard_crc": []}
     for si, shard in enumerate(shards):
         path = tmp / f"shard_{si}.npz"
         np.savez(path, **shard)
         manifest["shard_bytes"].append(path.stat().st_size)
+        manifest["shard_crc"].append(zlib.crc32(path.read_bytes()) & 0xFFFFFFFF)
     (tmp / "manifest.json").write_text(json.dumps(manifest))
     if final.exists():
         shutil.rmtree(final)
@@ -70,47 +80,131 @@ class CheckpointCorrupt(RuntimeError):
     pass
 
 
+class CheckpointWriteError(RuntimeError):
+    """A background checkpoint save failed (disk full, permissions, a
+    non-serializable leaf...).  Raised ONCE by the next
+    ``AsyncCheckpointer.save()``/``wait()`` and then cleared — the writer
+    stays usable for later steps."""
+
+
 def latest_step(ckpt_dir: str | Path) -> int | None:
+    steps = complete_steps(ckpt_dir)
+    return steps[0] if steps else None
+
+
+def complete_steps(ckpt_dir: str | Path) -> list[int]:
+    """Steps with a published manifest, newest first — the fallback ladder
+    ``load_checkpoint*`` walks when a generation turns out corrupt."""
     ckpt_dir = Path(ckpt_dir)
     if not ckpt_dir.exists():
-        return None
+        return []
     steps = []
     for p in ckpt_dir.iterdir():
         if p.name.startswith("step_") and not p.name.endswith(".tmp") and (
                 p / "manifest.json").exists():
             steps.append(int(p.name.split("_")[1]))
-    return max(steps) if steps else None
+    return sorted(steps, reverse=True)
 
 
-def load_checkpoint(ckpt_dir: str | Path, template, step: int | None = None):
-    """Restore into the structure of ``template`` (shapes/dtypes verified)."""
-    ckpt_dir = Path(ckpt_dir)
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no complete checkpoint under {ckpt_dir}")
+def _load_step_flat(ckpt_dir: Path, step: int):
+    """Read one generation as ``(flat {path-key: array}, manifest)``; every
+    failure mode — torn manifest, missing shard, size drift, bit flip —
+    surfaces as :class:`CheckpointCorrupt` so the caller can fall back
+    uniformly."""
     d = ckpt_dir / f"step_{step:08d}"
-    manifest = json.loads((d / "manifest.json").read_text())
+    try:
+        manifest = json.loads((d / "manifest.json").read_text())
+    except (OSError, ValueError) as e:
+        raise CheckpointCorrupt(f"{d}: unreadable manifest: {e}") from e
     flat: dict[str, np.ndarray] = {}
     for si in range(manifest["n_shards"]):
         path = d / f"shard_{si}.npz"
-        if path.stat().st_size != manifest["shard_bytes"][si]:
+        try:
+            raw = path.read_bytes()
+        except OSError as e:  # missing shard used to escape as FileNotFoundError
+            raise CheckpointCorrupt(f"{path}: unreadable shard: {e}") from e
+        if len(raw) != manifest["shard_bytes"][si]:
             raise CheckpointCorrupt(f"{path} size mismatch vs manifest")
-        with np.load(path) as z:
-            for k in z.files:
-                flat[k.replace("__", "/")] = z[k]
-    leaves_t, treedef = jax.tree_util.tree_flatten_with_path(template)
-    out = []
-    for path, leaf in leaves_t:
-        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
-        if key not in flat:
-            raise CheckpointCorrupt(f"missing leaf {key}")
-        arr = flat[key]
-        if tuple(arr.shape) != tuple(leaf.shape):
-            raise CheckpointCorrupt(f"{key}: shape {arr.shape} != {leaf.shape}")
-        out.append(jax.numpy.asarray(arr, leaf.dtype))
-    return jax.tree_util.tree_unflatten(
-        jax.tree_util.tree_structure(template), out), step
+        want_crc = manifest.get("shard_crc")  # absent on pre-durability saves
+        if want_crc is not None and (
+                zlib.crc32(raw) & 0xFFFFFFFF) != want_crc[si]:
+            raise CheckpointCorrupt(f"{path} CRC mismatch vs manifest")
+        try:
+            with np.load(path) as z:
+                for k in z.files:
+                    flat[k.replace("__", "/")] = z[k]
+        except Exception as e:  # zip/npz-level damage the CRC gate missed
+            raise CheckpointCorrupt(f"{path}: undecodable shard: {e}") from e
+    missing = [k for k in manifest["keys"] if k not in flat]
+    if missing:
+        raise CheckpointCorrupt(f"{d}: shards lost leaves {missing[:4]}")
+    return flat, manifest
+
+
+def _fallback_load(ckpt_dir: Path, step: int | None, restore):
+    """Shared degradation ladder: pinned step = one attempt; ``step=None``
+    walks complete generations newest-first and raises only after ALL fail."""
+    if step is not None:
+        return restore(*_load_step_flat(ckpt_dir, step)), step
+    steps = complete_steps(ckpt_dir)
+    if not steps:
+        raise FileNotFoundError(f"no complete checkpoint under {ckpt_dir}")
+    errors = []
+    for s in steps:
+        try:
+            return restore(*_load_step_flat(ckpt_dir, s)), s
+        except CheckpointCorrupt as e:
+            errors.append(str(e))
+    raise CheckpointCorrupt(
+        f"every checkpoint generation under {ckpt_dir} is corrupt: "
+        + "; ".join(errors[:4]))
+
+
+def load_checkpoint(ckpt_dir: str | Path, template, step: int | None = None):
+    """Restore into the structure of ``template`` (shapes/dtypes verified).
+
+    With ``step=None`` a corrupt newest generation (torn shard, bit flip,
+    template mismatch) falls back to the next-older complete one."""
+    ckpt_dir = Path(ckpt_dir)
+
+    def restore(flat: dict[str, np.ndarray], manifest: dict):
+        leaves_t, _ = jax.tree_util.tree_flatten_with_path(template)
+        out = []
+        for path, leaf in leaves_t:
+            key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                           for k in path)
+            if key not in flat:
+                raise CheckpointCorrupt(f"missing leaf {key}")
+            arr = flat[key]
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise CheckpointCorrupt(
+                    f"{key}: shape {arr.shape} != {leaf.shape}")
+            out.append(jax.numpy.asarray(arr, leaf.dtype))
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(template), out)
+
+    return _fallback_load(ckpt_dir, step, restore)
+
+
+def load_checkpoint_raw(ckpt_dir: str | Path, step: int | None = None):
+    """Template-free restore: the flat ``{path-key: np.ndarray}`` dict plus
+    the step it came from, with manifest dtypes reapplied (bf16 narrows
+    back).  The durable serving layer uses this — its snapshot trees are
+    dynamic (cache contents, relation counts), so no structural template
+    exists ahead of the load.  Same fallback ladder as ``load_checkpoint``."""
+    ckpt_dir = Path(ckpt_dir)
+
+    def restore(flat: dict[str, np.ndarray], manifest: dict):
+        dtypes = manifest.get("dtypes", {})
+        out = {}
+        for k, arr in flat.items():
+            want = dtypes.get(k)
+            if want == "bfloat16":  # widened to f32 in the npz; narrow back
+                arr = jax.numpy.asarray(arr, "bfloat16")
+            out[k] = arr
+        return out
+
+    return _fallback_load(ckpt_dir, step, restore)
 
 
 class AsyncCheckpointer:
@@ -137,17 +231,23 @@ class AsyncCheckpointer:
             finally:
                 self._q.task_done()
 
+    def _raise_pending(self):
+        # raise-once-then-clear: the error latch used to poison every later
+        # save()/wait() forever; now one failed write reports and recovers
+        err, self._err = self._err, None
+        if err is not None:
+            raise CheckpointWriteError(
+                f"background checkpoint save failed: {err}") from err
+
     def save(self, step: int, tree):
-        if self._err:
-            raise self._err
+        self._raise_pending()
         # device->host copy happens here so the step loop can proceed
         host_tree = jax.tree.map(np.asarray, tree)
         self._q.put((step, host_tree))  # blocks iff a save is in flight
 
     def wait(self):
         self._q.join()
-        if self._err:
-            raise self._err
+        self._raise_pending()
 
     def close(self):
         self.wait()

@@ -686,3 +686,52 @@ def counts_batch_csr(csr: CSRMatrix, srcs, spmv=None,
     res = fixpoint_csr_cached(csr, rows_from_sources(csr, srcs), spmv=spmv,
                               max_iters=max_iters)
     return check_additive_converged(res, max_iters, "plus-times CSR batch")
+
+
+# (de)serialization --------------------------------------------------------
+
+
+def csr_to_state(csr: CSRMatrix) -> tuple[dict, dict]:
+    """Flatten a :class:`CSRMatrix` to ``(arrays, meta)`` for the durable
+    snapshot layer: ``arrays`` maps stable field names to host ndarrays
+    (variable-count ``ell_slices`` become ``ell_slice_<i>``), ``meta`` is
+    JSON-safe static metadata.  The round-trip through
+    :func:`csr_from_state` is exact — COO tail contents, sliced-ELL layout
+    (``ell_cfg``) and the tile-skip plan all survive, so a restored service
+    resumes from bit-identical packed state instead of re-packing (and
+    re-folding a live tail into the spine, which would change layout)."""
+    arrays: dict[str, np.ndarray] = {}
+    for name in ("row_ptr", "col_idx", "edge_val", "src_idx", "ell_rank",
+                 "nnz", "tail_src", "tail_dst", "tail_val", "tail_ell",
+                 "tail_nnz"):
+        arrays[name] = np.asarray(getattr(csr, name))
+    for i, t in enumerate(csr.ell_slices):
+        arrays[f"ell_slice_{i}"] = np.asarray(t)
+    if csr.plan_cfg is not None:
+        for name in ("plan_tile", "plan_chunk", "plan_first"):
+            arrays[name] = np.asarray(getattr(csr, name))
+    meta = {"n": csr.n, "n_alloc": csr.n_alloc, "kind": csr.kind,
+            "ell_cfg": list(csr.ell_cfg),
+            "plan_cfg": list(csr.plan_cfg) if csr.plan_cfg else None,
+            "n_slices": len(csr.ell_slices)}
+    return arrays, meta
+
+
+def csr_from_state(arrays: dict, meta: dict) -> CSRMatrix:
+    """Inverse of :func:`csr_to_state` (arrays land back on device)."""
+    j = {k: jnp.asarray(v) for k, v in arrays.items()
+         if not k.startswith("ell_slice_")}
+    slices = tuple(jnp.asarray(arrays[f"ell_slice_{i}"])
+                   for i in range(int(meta["n_slices"])))
+    plan_cfg = tuple(meta["plan_cfg"]) if meta.get("plan_cfg") else None
+    return CSRMatrix(
+        row_ptr=j["row_ptr"], col_idx=j["col_idx"], edge_val=j["edge_val"],
+        src_idx=j["src_idx"], ell_slices=slices, ell_rank=j["ell_rank"],
+        nnz=j["nnz"], tail_src=j["tail_src"], tail_dst=j["tail_dst"],
+        tail_val=j["tail_val"], tail_ell=j["tail_ell"],
+        tail_nnz=j["tail_nnz"],
+        plan_tile=j.get("plan_tile"), plan_chunk=j.get("plan_chunk"),
+        plan_first=j.get("plan_first"),
+        n=int(meta["n"]), n_alloc=int(meta["n_alloc"]),
+        kind=str(meta["kind"]), ell_cfg=tuple(meta["ell_cfg"]),
+        plan_cfg=plan_cfg)

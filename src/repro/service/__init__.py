@@ -16,13 +16,20 @@ Observability (``repro.obs``) threads through the whole stack:
 (Prometheus + JSON exporters), ``probe=True`` surfaces per-iteration
 fixpoint Δs, and ``explain()["kernels"]`` reports roofline attribution.
 ``MetricsRegistry`` and ``Tracer`` are re-exported here for convenience.
+
+Durability (``durable.py``): ``DatalogService(durable_dir=...)`` write-ahead
+logs every append, snapshots the hot serving state through the background
+checkpoint writer, and recovers warm (newest complete snapshot + WAL replay
+through the append-resume path) with graceful degradation on corruption.
 """
 from ..obs.metrics import MetricsRegistry
 from ..obs.trace import Tracer
 from .admission import AdmissionStats, AsyncDatalogService, QueueFullError
 from .cache import CacheEntry, LRUCache
+from .durable import DurabilityManager, WriteAheadLog
 from .session import DatalogService, ServiceStats
 
 __all__ = ["AdmissionStats", "AsyncDatalogService", "CacheEntry",
-           "DatalogService", "LRUCache", "MetricsRegistry", "QueueFullError",
-           "ServiceStats", "Tracer"]
+           "DatalogService", "DurabilityManager", "LRUCache",
+           "MetricsRegistry", "QueueFullError", "ServiceStats", "Tracer",
+           "WriteAheadLog"]

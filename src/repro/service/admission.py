@@ -224,6 +224,13 @@ class AsyncDatalogService:
             self.stats.appends += 1
         return self
 
+    def snapshot(self, wait: bool = False) -> int | None:
+        """Durable snapshot fenced like an append: in-flight flushes drain
+        first, so the persisted cut never interleaves with a batch's
+        launch→finalize window (the cache fill it would otherwise race)."""
+        with self._fence.writing():
+            return self.svc.snapshot(wait=wait)
+
     @property
     def epoch(self) -> int:
         return self.svc.epoch

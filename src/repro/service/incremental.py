@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.ir import Literal, Program
+from ..core.ir import Const, Literal, Program, Var
 from ..core.semiring import Semiring
 
 
@@ -131,6 +131,49 @@ class TupleSnapshot:
     seeds: np.ndarray  # (B, 1 + n_bound) qid-tagged seed rows
     qlits: list[Literal]  # the batch's query goals, qid order
     state: dict[str, tuple[np.ndarray, np.ndarray | None]]  # pred -> model
+
+
+def literal_to_json(q: Literal) -> dict:
+    """JSON-safe encoding of a (positive) query goal — the durable snapshot
+    layer persists :class:`TupleSnapshot.qlits` so a restarted service can
+    rebuild the owning template and resume the batch warm."""
+    return {"pred": q.pred,
+            "args": [{"c": int(a.value)} if isinstance(a, Const)
+                     else {"v": a.name} for a in q.args]}
+
+
+def literal_from_json(d: dict) -> Literal:
+    return Literal(d["pred"], tuple(
+        Const(int(a["c"])) if "c" in a else Var(a["v"]) for a in d["args"]))
+
+
+def snapshot_to_state(snap: "TupleSnapshot", put) -> dict:
+    """Serialize a :class:`TupleSnapshot` for the durable layer: arrays are
+    emitted through ``put(name, array)`` (positional names, so relation
+    names with ``__`` in them never collide with the checkpoint store's
+    path-key escaping) and the returned dict is the JSON-safe meta."""
+    put("seeds", np.asarray(snap.seeds))
+    state_meta = []
+    for j, (pred, (rows, vals)) in enumerate(sorted(snap.state.items())):
+        state_meta.append({"pred": pred, "vals": vals is not None})
+        put(f"state/{j}/rows", np.asarray(rows))
+        if vals is not None:
+            put(f"state/{j}/vals", np.asarray(vals))
+    return {"qlits": [literal_to_json(q) for q in snap.qlits],
+            "state": state_meta}
+
+
+def snapshot_from_state(meta: dict, get) -> "TupleSnapshot":
+    """Inverse of :func:`snapshot_to_state`; ``get(name)`` resolves the
+    positional array names back to ndarrays."""
+    state: dict[str, tuple] = {}
+    for j, ps in enumerate(meta["state"]):
+        rows = np.asarray(get(f"state/{j}/rows"))
+        vals = np.asarray(get(f"state/{j}/vals")) if ps["vals"] else None
+        state[ps["pred"]] = (rows, vals)
+    return TupleSnapshot(seeds=np.asarray(get("seeds")),
+                         qlits=[literal_from_json(d) for d in meta["qlits"]],
+                         state=state)
 
 
 def resumable_program(program: Program) -> bool:

@@ -99,7 +99,7 @@ def _parse_append(spec: str) -> tuple[str, np.ndarray]:
 
 def _repl(svc) -> None:
     print("serve> tc(1,X) queries | +arc:4,5 appends | .stats | .metrics "
-          "| :quit", file=sys.stderr)
+          "| .snapshot | :quit", file=sys.stderr)
     for line in sys.stdin:
         line = line.strip()
         if not line:
@@ -112,6 +112,13 @@ def _repl(svc) -> None:
         if line == ".metrics":
             metrics = getattr(svc, "svc", svc).metrics
             print(metrics.to_prometheus(), end="")
+            continue
+        if line == ".snapshot":
+            try:
+                step = svc.snapshot(wait=True)
+                print(f"snapshot published (step {step})")
+            except Exception as e:
+                print(f"error: {e}", file=sys.stderr)
             continue
         try:
             if line.startswith("+"):
@@ -166,6 +173,14 @@ def main(argv: list[str] | None = None) -> int:
                     help="autotune the CSR kernel layout per relation "
                          "(measured search; see kernels/autotune.py)")
     ap.add_argument("--default-cap", type=int, default=1 << 16)
+    ap.add_argument("--durable", metavar="DIR",
+                    help="crash-safe serving state under DIR (WAL + "
+                         "snapshots): appends write-ahead-log before "
+                         "mutating, and startup recovers warm from the "
+                         "newest complete snapshot + WAL replay")
+    ap.add_argument("--snapshot-every", type=int, default=0, metavar="N",
+                    help="with --durable: auto-snapshot after every N "
+                         "appends (0 = only explicit .snapshot / exit)")
     ap.add_argument("--stats", action="store_true",
                     help="print service stats after all actions")
     ap.add_argument("--metrics-out", metavar="FILE",
@@ -196,7 +211,9 @@ def main(argv: list[str] | None = None) -> int:
                          sparse={"auto": None, "csr": True,
                                  "dense": False}[args.sparse],
                          tune=args.tune or None,
-                         tracer=bool(args.trace_out))
+                         tracer=bool(args.trace_out),
+                         durable_dir=args.durable,
+                         snapshot_every=args.snapshot_every)
     front = None
     if args.use_async:
         from .admission import AsyncDatalogService
@@ -249,6 +266,11 @@ def main(argv: list[str] | None = None) -> int:
         print(f"trace -> {args.trace_out}", file=sys.stderr)
     if front is not None:
         front.close()
+    if args.durable:
+        # planned shutdown: publish a final snapshot so the next start
+        # recovers warm with an empty WAL suffix, then release the WAL
+        svc.snapshot(wait=True)
+        svc.close()
     return 0
 
 

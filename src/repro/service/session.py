@@ -564,6 +564,21 @@ class DatalogService:
                       accumulate on ``last_probes`` and ``explain()``.
                       Costs one host sync per fixpoint iteration — keep off
                       the steady-state path.
+    ``durable_dir``   crash-safe persistence root (``service/durable.py``):
+                      every append WALs before mutating, :meth:`snapshot`
+                      persists the hot state through the background
+                      checkpoint writer, and construction *recovers* —
+                      newest complete snapshot + WAL replay through the
+                      append-resume path, falling back per the degradation
+                      ladder (older generation -> cold rebuild), never
+                      crashing.  ``explain()["durability"]`` reports the
+                      path taken.  ``None`` (default) = in-memory only.
+    ``snapshot_every``  auto-snapshot after every N WALed appends
+                      (0 = explicit :meth:`snapshot` calls only).
+    ``keep_snapshots``  snapshot generations retained for the fallback
+                      ladder (older ones are pruned after each publish).
+    ``durable_fsync``  fsync the WAL per append (True); False trades the
+                      tail's durability for append latency.
     """
 
     def __init__(self, program, db: dict[str, np.ndarray], *, bits: int = 18,
@@ -577,7 +592,9 @@ class DatalogService:
                  sparse_threshold: float | None = None,
                  csr_rebuild_frac: float = 0.25, snapshot_lru: int = 1,
                  bucket_floors: dict[str, int] | None = None,
-                 tune=None, metrics=None, tracer=None, probe: bool = False):
+                 tune=None, metrics=None, tracer=None, probe: bool = False,
+                 durable_dir=None, snapshot_every: int = 0,
+                 keep_snapshots: int = 3, durable_fsync: bool = True):
         if isinstance(program, str):
             program = parse_program(program, constants=constants)
         self.program = program
@@ -644,6 +661,17 @@ class DatalogService:
             "datalog_batch_size", "queries per launched batch",
             buckets=_BATCH_BUCKETS)
         self.metrics.register_collector(self._absorb_stats)
+        # -- durability (service/durable.py): WAL + snapshots + recovery -----
+        self._durable = None
+        if durable_dir is not None:
+            from .durable import DurabilityManager
+            self._durable = DurabilityManager(
+                durable_dir, snapshot_every=snapshot_every,
+                keep_snapshots=keep_snapshots, fsync=durable_fsync,
+                tracer=self.tracer)
+            self.metrics.register_collector(self._durable.absorb_metrics)
+            with self.lock:
+                self._durable.recover(self)
 
     # -- queries -------------------------------------------------------------
 
@@ -786,6 +814,10 @@ class DatalogService:
                     f"{rel!r} is not an EDB relation of this service "
                     f"(known: {sorted(self.db)}); appends are EDB-only")
             rows = _inc.validate_append(rows, self.db[rel].shape[1], self.bits)
+            if self._durable is not None:
+                # write-ahead: the record is durable BEFORE any in-memory
+                # state mutates, so a crash anywhere below replays it
+                self._durable.log_append(rel, rows, self.epoch + 1)
             # EDB relations stay SETS under appends (Engine normalization
             # dedupes at build; re-appended duplicates must not double-count
             # additive aggregate bindings on the next tuple evaluation)
@@ -805,7 +837,30 @@ class DatalogService:
             for pred, ds in self._dense.items():
                 if ds.low.edb == rel:
                     self._refresh_dense(pred, ds, rows)
+            if self._durable is not None:
+                self._durable.maybe_snapshot(self)
             return self
+
+    def snapshot(self, wait: bool = False) -> int | None:
+        """Hand a consistent snapshot of the hot serving state to the
+        background checkpoint writer (requires ``durable_dir=``); returns
+        the published generation's step.  ``wait=True`` blocks until the
+        atomic rename lands — use it before a planned shutdown so the next
+        start recovers warm with an empty WAL suffix."""
+        if self._durable is None:
+            raise RuntimeError("snapshot() requires DatalogService("
+                               "durable_dir=...)")
+        with self.lock:
+            step = self._durable.snapshot(self)
+        if wait:
+            self._durable.wait()
+        return step
+
+    def close(self) -> None:
+        """Flush and release durable resources (no-op without
+        ``durable_dir=``); the service stays usable for in-memory serving."""
+        if self._durable is not None:
+            self._durable.close()
 
     def _resume_tuple_snapshots(self, rel: str) -> dict:
         """Resume batched tuple templates from their fixpoint snapshots and
@@ -915,6 +970,8 @@ class DatalogService:
             rep["kernels"]["tuning"] = tuning
         if self.probe:
             rep["probes"] = [p.as_dict() for p in self.last_probes]
+        if self._durable is not None:
+            rep["durability"] = self._durable.report()
         return rep
 
     def _record_probe(self, pr) -> None:

@@ -1,0 +1,100 @@
+"""Fault injection for the durable serving layer (tests/ and ci.sh only).
+
+Each helper wounds a durable directory the way a real failure would:
+
+* :func:`kill_mid_save` — crash between shard writes and the atomic rename:
+  a ``step_N.tmp`` turd with shards but no manifest (``os.replace`` never
+  ran, so no complete generation appeared or disappeared);
+* :func:`bit_flip_shard` — silent media corruption inside a *published*
+  shard (same size, different bytes — only the manifest CRC catches it);
+* :func:`stale_manifest` — a manifest that lies about its shards (a shard
+  vanished after publish: the ``FileNotFoundError`` path);
+* :func:`truncate_wal` / :func:`garble_wal_tail` — a torn append: the
+  process died mid-``write`` (short frame) or the disk garbled the last
+  frame in place (CRC mismatch).
+
+All of them must be survived *automatically*: recovery degrades per the
+ladder (older generation → cold rebuild) and answers stay bit-identical to
+a never-crashed twin.  ``tests/test_durable.py`` asserts exactly that.
+"""
+from __future__ import annotations
+
+import shutil
+from pathlib import Path
+
+
+def step_dirs(snap_dir: str | Path) -> list[Path]:
+    """Published generation dirs, newest first."""
+    snap_dir = Path(snap_dir)
+    if not snap_dir.exists():
+        return []
+    out = [p for p in snap_dir.iterdir()
+           if p.name.startswith("step_") and not p.name.endswith(".tmp")]
+    return sorted(out, reverse=True)
+
+
+def _pick_step(snap_dir: str | Path, step: int | None) -> Path:
+    dirs = step_dirs(snap_dir)
+    if not dirs:
+        raise FileNotFoundError(f"no published snapshot under {snap_dir}")
+    if step is None:
+        return dirs[0]
+    return Path(snap_dir) / f"step_{step:08d}"
+
+
+def kill_mid_save(snap_dir: str | Path) -> Path:
+    """Simulate a crash between shard writes and the atomic rename: clone
+    the newest generation into ``step_<N+1>.tmp`` *without* its manifest.
+    A correct store must treat the turd as invisible."""
+    src = _pick_step(snap_dir, None)
+    n = int(src.name.split("_")[1])
+    tmp = Path(snap_dir) / f"step_{n + 1:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    shutil.copytree(src, tmp)
+    (tmp / "manifest.json").unlink()
+    return tmp
+
+
+def bit_flip_shard(snap_dir: str | Path, step: int | None = None,
+                   shard: int = 0, offset: int | None = None) -> Path:
+    """Flip one byte inside a published shard — size unchanged, so only the
+    manifest's CRC32 can catch it before the arrays are trusted."""
+    d = _pick_step(snap_dir, step)
+    path = d / f"shard_{shard}.npz"
+    raw = bytearray(path.read_bytes())
+    pos = (len(raw) // 2) if offset is None else offset
+    raw[pos] ^= 0xFF
+    path.write_bytes(bytes(raw))
+    return path
+
+
+def stale_manifest(snap_dir: str | Path, step: int | None = None) -> Path:
+    """Make the newest manifest stale: delete a shard it still references
+    (the missing-file path that must surface as corruption, not crash)."""
+    d = _pick_step(snap_dir, step)
+    path = d / "shard_0.npz"
+    path.unlink()
+    return d
+
+
+def truncate_wal(wal_path: str | Path, nbytes: int = 7) -> int:
+    """Tear the WAL's tail: chop ``nbytes`` off the end (a crash mid-append
+    leaves exactly this — a frame shorter than its declared length)."""
+    wal_path = Path(wal_path)
+    size = wal_path.stat().st_size
+    keep = max(8, size - nbytes)  # never truncate into the magic
+    with open(wal_path, "r+b") as f:
+        f.truncate(keep)
+    return size - keep
+
+
+def garble_wal_tail(wal_path: str | Path) -> None:
+    """Garble the last frame in place (same length, bad CRC) — replay must
+    treat it exactly like a short tail: truncate, keep the prefix."""
+    wal_path = Path(wal_path)
+    raw = bytearray(wal_path.read_bytes())
+    if len(raw) <= 12:
+        raise ValueError("WAL has no frame to garble")
+    raw[-1] ^= 0xFF
+    wal_path.write_bytes(bytes(raw))

@@ -36,6 +36,12 @@ fixpoint over Python sets — on TEN evaluation paths:
                                  graph-level path-count oracle
                                  (``ref_path_counts``) exactly — integer
                                  counts compare exactly, never fp-tolerant)
+ 12. durable restart             (``durable_dir=``: kill the service between
+                                 batches, restart, and require answers
+                                 bit-identical to a never-restarted twin —
+                                 snapshot+WAL warm recovery on even cases,
+                                 pure WAL-replay cold recovery on odd ones,
+                                 duplicate-append WAL replay every third)
 
 The count/sum (``cpath``/``spath``) and max-plus (``lpath``) shapes draw
 *acyclic* EDBs (arcs with src < dst): the additive (+,×) carrier has no
@@ -52,6 +58,7 @@ cache; only EDB rows, query constants and seeds vary.
 """
 import os
 import random
+import tempfile
 import threading
 
 import numpy as np
@@ -297,6 +304,41 @@ def test_differential(case):
         svc3.append(rel, db[rel][-k:])
         for i, got in enumerate(svc3.ask_batch(queries)):
             check("append-resume-csr", case, queries[i], got, want[i])
+
+        # 12. durable serving: kill/restart between batches — snapshot + WAL
+        # recovery must serve answers bit-identical to the never-restarted
+        # twin (svc2 above, same EDB prefix + append stream).  Odd cases
+        # crash with NO snapshot (pure WAL replay from genesis); every third
+        # case re-appends the exact same rows pre-crash, so recovery replays
+        # duplicate WAL records — a no-op under set semantics.
+        with tempfile.TemporaryDirectory() as dur_dir:
+            svc_d = DatalogService(text, db=base, durable_dir=dur_dir,
+                                   **CAPS)
+            svc_d.ask_batch(queries)
+            if case % 2 == 0:
+                svc_d.snapshot(wait=True)
+            svc_d.append(rel, db[rel][-k:])
+            twin_epoch = svc2.epoch
+            if case % 3 == 0:
+                svc_d.append(rel, db[rel][-k:])  # duplicate append
+                svc2.append(rel, db[rel][-k:])
+                twin_epoch = svc2.epoch
+            twin_res = svc2.ask_batch(queries)
+            del svc_d  # crash: no close(), no final snapshot
+            svc_r = DatalogService(text, db=base, durable_dir=dur_dir,
+                                   **CAPS)
+            rep = svc_r.explain()["durability"]["recovery"]
+            assert rep["mode"] == ("warm" if case % 2 == 0 else "cold"), rep
+            assert svc_r.epoch == twin_epoch, (case, rep)
+            for i, got in enumerate(svc_r.ask_batch(queries)):
+                check("service-durable", case, queries[i], got, want[i])
+                t = twin_res[i]
+                for a, b in zip(t if isinstance(t, tuple) else (t,),
+                                got if isinstance(got, tuple) else (got,)):
+                    assert np.array_equal(a, b), (
+                        f"case={case} query={queries[i]!r}: durable restart "
+                        "not bit-identical to the no-restart twin")
+            svc_r.close()
 
 
 # -- hypothesis variant (runs when hypothesis is installed) ------------------
